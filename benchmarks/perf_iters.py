@@ -1,0 +1,131 @@
+"""§Perf hillclimb driver: run named variants of the three chosen cells
+and record the roofline-term deltas (hypothesis → change → measure).
+
+    PYTHONPATH=src python -m benchmarks.perf_iters
+
+Cells (chosen per the assignment's three criteria):
+  A qwen2.5-14b × train_4k   — most representative of the paper's
+                               technique (every placement is planner-
+                               chosen) and most collective-bound.
+  B qwen2.5-14b × decode_32k — worst roofline fraction (memory-bound).
+  C deepseek-v2-lite × train_4k — MoE+MLA: EP/TP interplay.
+
+Variants re-lower + re-compile on the production mesh and re-meter the
+structural roofline; results append to experiments/perf_iters.json.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import dataclasses
+import json
+
+from repro.configs import get_config
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "perf_iters.json")
+
+
+def run_variant(tag, arch, shape_name, cfg_override=None, hypothesis="",
+                mesh_shape=None):
+    from repro.launch import dryrun
+
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+
+    # monkeypatch the config the dry-run sees for this cell
+    orig = dryrun.get_config
+    dryrun.get_config = lambda a, smoke=False: cfg
+    try:
+        rec = dryrun.lower_cell(arch, shape_name, multi_pod=False,
+                                mesh_shape=mesh_shape)
+    finally:
+        dryrun.get_config = orig
+    t = rec.get("roofline", {})
+    out = {
+        "tag": tag,
+        "cell": f"{arch}×{shape_name}",
+        "hypothesis": hypothesis,
+        "override": cfg_override or {},
+        "compute_s": t.get("compute_s"),
+        "memory_s": t.get("memory_s"),
+        "collective_s": t.get("collective_s"),
+        "dominant": t.get("dominant"),
+        "step_s": t.get("step_s"),
+        "roofline_fraction": t.get("roofline_fraction"),
+        "mem_chip_gib": (rec.get("memory", {}).get("argument_gib", 0)
+                         + rec.get("memory", {}).get("temp_gib", 0)),
+        "status": rec.get("status"),
+    }
+    print(f"[{tag}] dom={out['dominant']} step={out['step_s']:.4f}s "
+          f"frac={out['roofline_fraction']:.4f} "
+          f"mem={out['mem_chip_gib']:.1f}G")
+    return out
+
+
+def main():
+    results = []
+
+    # ---- Cell B: decode, memory-bound --------------------------------
+    results.append(run_variant(
+        "B0-baseline", "qwen2.5-14b", "decode_32k",
+        hypothesis="baseline: bf16 KV cache dominates decode bytes"))
+    results.append(run_variant(
+        "B1-fp8-kv", "qwen2.5-14b", "decode_32k",
+        {"kv_cache_dtype": "float8_e4m3fn"},
+        hypothesis="cache bytes halve → memory term ≈ halves → "
+                   "roofline fraction ≈ doubles (quality cost ~4% logit "
+                   "rel-err, measured in tests)"))
+
+    # ---- Cell A: train, collective-bound ------------------------------
+    results.append(run_variant(
+        "A0-baseline", "qwen2.5-14b", "train_4k",
+        hypothesis="baseline: planner-chosen placements, accum=16, "
+                   "dots_saveable remat"))
+    results.append(run_variant(
+        "A1-full-remat", "qwen2.5-14b", "train_4k",
+        {"remat": "full"},
+        hypothesis="full remat: +27% compute term (4.0× vs 3.15× fwd) "
+                   "but halves live activations → enables A2"))
+    results.append(run_variant(
+        "A2-mesh-64x4", "qwen2.5-14b", "train_4k", None,
+        hypothesis="mesh refactor 16×16 → 64×4: the Megatron AR ring over "
+                   "the model axis scales with (sm−1); at sm=4 the TP "
+                   "collective shrinks 5× (62→12.4 TB) while weights "
+                   "(28 GB bf16 / 4 = 7 GB/chip) still fit — step should "
+                   "become compute-bound near the 6·N·D bound",
+        mesh_shape=(64, 4)))
+    results.append(run_variant(
+        "A3-mesh-64x4-fullremat", "qwen2.5-14b", "train_4k",
+        {"remat": "full"},
+        hypothesis="A2 + full remat: keep the per-chip memory at 64×4 "
+                   "under control (bigger bf16 weight shard)",
+        mesh_shape=(64, 4)))
+
+    # ---- Cell C: MoE train ---------------------------------------------
+    results.append(run_variant(
+        "C0-baseline", "deepseek-v2-lite-16b", "train_4k",
+        hypothesis="baseline: grouped local dispatch, cf=1.25"))
+    results.append(run_variant(
+        "C1-capacity-1.0", "deepseek-v2-lite-16b", "train_4k",
+        {"moe_capacity_factor": 1.0},
+        hypothesis="cf 1.25→1.0: routed tokens −20% → expert flops and "
+                   "EP dispatch bytes −20% (quality guarded by the "
+                   "load-balance aux loss)"))
+    results.append(run_variant(
+        "C2-mesh-64x4", "deepseek-v2-lite-16b", "train_4k", None,
+        hypothesis="mesh refactor 16×16 → 64×4: same AR-ring argument as "
+                   "A2; experts 64 % 4 == 0 keeps EP available",
+        mesh_shape=(64, 4)))
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Roofline table assembly: reads experiments/dryrun/*.json and renders
+the per-(arch × shape × mesh) three-term analysis (assignment g).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    out.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                            if r["shape"] in SHAPE_ORDER else 99))
+    return out
+
+
+def _fmt_s(x: Optional[float]) -> str:
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def table(mesh: str = "single") -> List[str]:
+    rows = load(mesh)
+    if not rows:
+        return [f"(no dry-run records for mesh={mesh}; run "
+                f"python -m repro.launch.dryrun --all"
+                + (" --multi-pod" if mesh == "multi" else "") + ")"]
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'collect':>9s} {'dominant':>10s} {'frac':>6s} {'useful':>7s} "
+           f"{'mem/chip':>9s}")
+    lines = [f"# Roofline — mesh {rows[0].get('mesh', mesh)} "
+             f"(TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)", hdr]
+    ok = skip = err = 0
+    for r in rows:
+        if r["status"] == "skip":
+            skip += 1
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"{'— skipped: sub-quadratic-only shape —':>40s}")
+            continue
+        if r["status"] != "ok":
+            err += 1
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} ERROR "
+                         f"{r.get('error', '')[:60]}")
+            continue
+        ok += 1
+        t = r["roofline"]
+        frac = t.get("roofline_fraction")
+        useful = t.get("useful_flops_ratio")
+        mem = (r["memory"]["argument_gib"] + r["memory"]["temp_gib"])
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{_fmt_s(t['compute_s']):>9s} {_fmt_s(t['memory_s']):>9s} "
+            f"{_fmt_s(t['collective_s']):>9s} {t['dominant']:>10s} "
+            f"{frac * 100 if frac else 0:5.1f}% "
+            f"{useful * 100 if useful else 0:6.1f}% "
+            f"{mem:8.2f}G")
+    lines.append(f"# {ok} ok, {skip} skipped (documented), {err} errors")
+    return lines
+
+
+def run(mesh=None) -> List[str]:
+    lines = table("single")
+    multi = table("multi")
+    if len(multi) > 2:
+        lines += [""] + multi
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[sys.argv.index("--mesh") + 1] \
+        if "--mesh" in sys.argv else "single"
+    print("\n".join(table(which)))

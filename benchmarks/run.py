@@ -1,0 +1,59 @@
+"""Benchmark runner: one section per paper table + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--with-measured]
+
+``--with-measured`` additionally executes the scaled-down distributed
+plans on an 8-host-device mesh (slower; spawns a subprocess so the main
+process keeps its single-device view).
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--with-measured", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import ffnn, matmul, nn_search, roofline
+
+    sections = [
+        ("§5.1 matmul (Tables 3–4)", matmul.run),
+        ("§5.2 nn-search (Tables 5–6)", nn_search.run),
+        ("§5.3 ffnn (Tables 7–9)", ffnn.run),
+        ("roofline (assignment g)", roofline.run),
+    ]
+    failures = 0
+    for title, fn in sections:
+        print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+        try:
+            for line in fn(None):
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"SECTION FAILED: {e!r}")
+
+    if args.with_measured:
+        print(f"\n{'=' * 72}\nmeasured 8-device runs (subprocess)\n"
+              f"{'=' * 72}")
+        code = (
+            "import os;"
+            "os.environ['XLA_FLAGS']="
+            "'--xla_force_host_platform_device_count=8';"
+            "import jax;"
+            "from benchmarks import matmul;"
+            "mesh = jax.make_mesh((8,), ('sites',),"
+            " axis_types=(jax.sharding.AxisType.Auto,));"
+            "print('\\n'.join(str(r) for r in matmul.measured(mesh)))")
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, timeout=1200)
+        print(proc.stdout or proc.stderr)
+        failures += proc.returncode != 0
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

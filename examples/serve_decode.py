@@ -1,0 +1,74 @@
+"""Serving example: batched prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch gemma2-2b]
+
+Uses the reduced (smoke) config of the chosen architecture so it runs on
+CPU; the identical code path serves full configs on a pod (see
+repro.launch.serve, which adds TRA-planned cache sharding).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import decode_step, init_params, prefill
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True)
+    cache_len = args.prompt_len + args.gen
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = args.batch, args.prompt_len
+
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": jax.random.randint(key, (B, S), 0,
+                                              cfg.vocab_size)}
+    else:
+        batch = {"embeds": jax.random.normal(key, (B, S, cfg.d_model),
+                                             jnp.bfloat16)}
+
+    pf = jax.jit(lambda p, b: prefill(cfg, p, b, cache_len))
+    t0 = time.perf_counter()
+    logits, cache = pf(params, batch)
+    jax.block_until_ready(logits)
+    print(f"[{cfg.name}] prefill {B}×{S}: "
+          f"{(time.perf_counter() - t0) * 1e3:.1f} ms "
+          f"(cache capacity {cache_len})")
+
+    step = jax.jit(lambda p, c, b: decode_step(cfg, p, c, b),
+                   donate_argnums=(1,))
+    tok = logits.argmax(-1).astype(jnp.int32)
+    seqs = [jax.device_get(tok)[:, 0]]
+    t1 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        if cfg.input_mode == "tokens":
+            inp = {"token": tok}
+        else:
+            inp = {"embed": jax.random.normal(key, (B, 1, cfg.d_model),
+                                              jnp.bfloat16)}
+        logits, cache = step(params, cache, inp)
+        tok = logits.argmax(-1).astype(jnp.int32)
+        seqs.append(jax.device_get(tok)[:, 0])
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t1
+    print(f"decode {args.gen - 1} steps: {B * (args.gen - 1) / dt:.1f} "
+          f"tok/s aggregate")
+    for b in range(min(B, 2)):
+        print(f"  seq {b}: {[int(s[b]) for s in seqs]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Architecture registry: ``get_config("qwen2-7b")`` / ``--arch`` flags."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (ModelConfig, ShapeSpec, SHAPES, input_specs,
+                                supports_shape)
+
+from repro.configs import (deepseek_v2_lite, gemma2_2b, internvl2_2b,
+                           llama4_scout_17b, mamba2_130m, minitron_4b,
+                           musicgen_large, qwen2_5_14b, qwen2_7b, zamba2_7b)
+
+_MODULES = {
+    "mamba2-130m": mamba2_130m,
+    "qwen2.5-14b": qwen2_5_14b,
+    "qwen2-7b": qwen2_7b,
+    "gemma2-2b": gemma2_2b,
+    "minitron-4b": minitron_4b,
+    "llama4-scout-17b-a16e": llama4_scout_17b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite,
+    "musicgen-large": musicgen_large,
+    "internvl2-2b": internvl2_2b,
+    "zamba2-7b": zamba2_7b,
+}
+
+CONFIGS: Dict[str, ModelConfig] = {k: m.CONFIG for k, m in _MODULES.items()}
+SMOKES: Dict[str, ModelConfig] = {k: m.SMOKE for k, m in _MODULES.items()}
+
+
+def list_archs() -> List[str]:
+    return sorted(CONFIGS)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKES if smoke else CONFIGS
+    try:
+        return table[arch]
+    except KeyError as exc:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}") \
+            from exc
+
+
+def get_shape(name: str) -> ShapeSpec:
+    try:
+        return SHAPES[name]
+    except KeyError as exc:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}") \
+            from exc
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """Every assigned (arch, shape) pair — 40 cells."""
+    return [(a, s) for a in list_archs() for s in SHAPES]
+
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "CONFIGS", "SMOKES",
+           "input_specs", "supports_shape", "list_archs", "get_config",
+           "get_shape", "all_cells"]

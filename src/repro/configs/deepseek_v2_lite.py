@@ -1,0 +1,37 @@
+"""deepseek-v2-lite-16b — MLA + fine-grained MoE (shared + routed top-6).
+
+[arXiv:2405.04434; hf]  27L d_model=2048 16H d_ff_expert=1408
+vocab=102400, MLA kv_lora=512 (qk_nope=128, qk_rope=64, v_head=128),
+2 shared + 64 routed experts top-6; layer 0 stays dense (d_ff=10944).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2_048,
+    vocab_size=102_400,
+    n_heads=16,
+    n_kv_heads=16,              # MLA: every head gets its own up-projection
+    head_dim=128,
+    use_mla=True,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    d_ff=10_944,                # dense layer-0 hidden
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    d_ff_expert=1_408,
+    first_dense_layers=1,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="deepseek-smoke", moe_capacity_factor=8.0, n_layers=2, d_model=64, vocab_size=256,
+    n_heads=4, n_kv_heads=4, head_dim=16, kv_lora_rank=32, qk_nope_dim=16,
+    qk_rope_dim=8, v_head_dim=16, d_ff=128, n_experts=8, top_k=2,
+    d_ff_expert=32, first_dense_layers=1)

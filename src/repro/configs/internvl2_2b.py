@@ -1,0 +1,27 @@
+"""internvl2-2b — InternViT + InternLM2 VLM (backbone only).
+
+[arXiv:2404.16821; hf]  24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92553.  The InternViT patch frontend is a STUB per assignment:
+``input_specs()`` provides precomputed patch/text embeddings
+(B, S, d_model); the InternLM2 decoder backbone runs as usual.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2_048,
+    vocab_size=92_553,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8_192,
+    input_mode="embeddings",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="internvl2-smoke", n_layers=2, d_model=64, vocab_size=256,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128)

@@ -1,0 +1,31 @@
+"""llama4-scout-17b-a16e — MoE transformer, 16 experts top-1.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]  48L d_model=5120 40H
+(GQA kv=8) d_ff=8192 (per expert) vocab=202048, MoE 16e top-1 + 1 shared
+expert.  head_dim = 128.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5_120,
+    vocab_size=202_048,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8_192,                 # dense-fallback hidden (unused: all MoE)
+    n_experts=16,
+    n_shared_experts=1,
+    top_k=1,
+    d_ff_expert=8_192,
+    rope_theta=500_000.0,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="llama4-smoke", moe_capacity_factor=8.0, n_layers=2, d_model=64, vocab_size=256,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, n_experts=4,
+    d_ff_expert=128)

@@ -1,0 +1,27 @@
+"""musicgen-large — decoder-only LM over EnCodec tokens (backbone only).
+
+[arXiv:2306.05284; hf]  48L d_model=2048 32H (kv=32, MHA) d_ff=8192
+vocab=2048.  The EnCodec frontend is a STUB per assignment:
+``input_specs()`` provides precomputed frame embeddings (B, S, d_model);
+the backbone is the standard decoder stack with a 2048-way codec head.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2_048,
+    vocab_size=2_048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8_192,
+    input_mode="embeddings",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="musicgen-smoke", n_layers=2, d_model=64, vocab_size=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128)

@@ -1,0 +1,157 @@
+"""Einstein-notation frontend for the TRA (paper §2.3).
+
+The paper proves TRA ⊇ Einstein notation by construction: every index of a
+tensor becomes a key dim (the tensor is chunked so blocks carry the same
+index structure), a binary term becomes a join on the shared indices, and
+contracted indices are aggregated out with ``matAdd``.  This module is that
+construction, executable:
+
+    C = einsum_tra("ij,jk->ik", {"ij": specA, "jk": specB})
+
+builds the logical plan; pairing it with the optimizer yields distributed
+einsums whose placement strategy is chosen by the paper's exact cost model.
+Chained/multi-operand expressions reduce left-to-right (each step is one
+join+aggregate), matching the grammar's binary production rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.kernels_registry import Kernel
+from repro.core.plan import TraAgg, TraInput, TraJoin, TraNode, TraReKey
+from repro.core.tra import RelType
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    """A tensor operand: per-index block counts and block sizes."""
+
+    name: str
+    indices: str                 # e.g. "ij"
+    blocks: Tuple[int, ...]      # key frontier per index
+    block_sizes: Tuple[int, ...] # array bound per index
+
+    @property
+    def rtype(self) -> RelType:
+        return RelType(self.blocks, self.block_sizes, jnp.float32)
+
+
+def _pairwise_einsum_kernel(idx_l: str, idx_r: str, idx_out: str,
+                            bl: Sequence[int], br: Sequence[int]) -> Kernel:
+    """Blockwise kernel for one binary contraction (the join's projOp)."""
+    spec = f"...{idx_l},...{idx_r}->...{idx_out}"
+    size = dict(zip(idx_l, bl))
+    size.update(zip(idx_r, br))
+    out_bound = tuple(size[i] for i in idx_out)
+    contracted = [i for i in set(idx_l) & set(idx_r)]
+    batchish = [i for i in idx_out]
+    flops = 2
+    for i in set(idx_l) | set(idx_r):
+        flops *= size[i]
+
+    return Kernel(
+        name=f"einsum[{idx_l},{idx_r}->{idx_out}]",
+        arity=2,
+        apply=lambda a, b: jnp.einsum(spec, a, b),
+        out_bound=lambda _bl, _br: out_bound,
+        flops=lambda _bl, _br: flops,
+    )
+
+
+def parse_spec(spec: str) -> Tuple[List[str], str]:
+    lhs, rhs = spec.replace(" ", "").split("->")
+    return lhs.split(","), rhs
+
+
+def einsum_tra(spec: str, operands) -> TraNode:
+    """Build the logical TRA plan for an einsum over chunked tensors.
+
+    ``operands`` is either a list of :class:`OperandSpec` (one per lhs term,
+    in order) or a dict keyed by index string (only when terms are unique).
+    Returns a plan whose inputs are named by the operand names and whose
+    output keys follow the rhs index order.
+    """
+    terms, out_idx = parse_spec(spec)
+    if len(terms) < 1:
+        raise ValueError("need at least one operand")
+    if isinstance(operands, dict):
+        if len(set(terms)) != len(terms):
+            raise ValueError("duplicate index terms: pass operands as a list")
+        specs = [operands[t] for t in terms]
+    else:
+        specs = list(operands)
+    if len(specs) != len(terms):
+        raise ValueError("operand count mismatch")
+
+    # start with the first operand
+    cur: TraNode = TraInput(specs[0].name, specs[0].rtype)
+    cur_idx = specs[0].indices
+    cur_blocks = dict(zip(specs[0].indices, specs[0].blocks))
+    cur_sizes = dict(zip(specs[0].indices, specs[0].block_sizes))
+
+    for k, s in enumerate(specs[1:], start=1):
+        rhs_remaining = set("".join(t for t in terms[k + 1:])) | set(out_idx)
+        nxt = TraInput(s.name, s.rtype)
+        shared = [i for i in cur_idx if i in s.indices]
+        jkl = tuple(cur_idx.index(i) for i in shared)
+        jkr = tuple(s.indices.index(i) for i in shared)
+        # post-join key order: cur indices ++ (s indices minus joined)
+        post_idx = cur_idx + "".join(i for i in s.indices if i not in shared)
+        contract = [i for i in shared if i not in rhs_remaining]
+        # the block kernel contracts WITHIN blocks; the agg below contracts
+        # ACROSS blocks.  kernel output = all non-contracted indices.
+        kept_idx = "".join(i for i in post_idx if i not in contract)
+        kern = _pairwise_einsum_kernel(
+            cur_idx, s.indices, kept_idx,
+            [cur_sizes[i] for i in cur_idx], list(s.block_sizes))
+        joined = TraJoin(cur, nxt, jkl, jkr, kern)
+        if contract:
+            from repro.core.kernels_registry import get_kernel
+            gb = tuple(post_idx.index(i) for i in kept_idx)
+            cur = TraAgg(joined, gb, get_kernel("matAdd"))
+            cur_idx = kept_idx
+        else:
+            cur = joined
+            cur_idx = post_idx
+        cur_blocks.update(zip(s.indices, s.blocks))
+        cur_sizes.update(zip(s.indices, s.block_sizes))
+
+    if cur_idx != out_idx:
+        if sorted(cur_idx) != sorted(out_idx):
+            # trailing contraction of indices absent from the output:
+            # contract within blocks (transform) then across blocks (agg)
+            from repro.core.kernels_registry import get_kernel
+            from repro.core.plan import TraTransform
+            keep = "".join(i for i in cur_idx if i in out_idx)
+            sizes = [cur_sizes[i] for i in cur_idx]
+            inner = Kernel(
+                name=f"einsum[{cur_idx}->{keep}]", arity=1,
+                apply=lambda a, s=f"...{cur_idx}->...{keep}":
+                    jnp.einsum(s, a),
+                out_bound=lambda b, ci=cur_idx, kp=keep:
+                    tuple(b[ci.index(i)] for i in kp),
+                flops=lambda b: int(jnp.prod(jnp.asarray(b))),
+            )
+            cur = TraTransform(cur, inner)
+            gb = tuple(cur_idx.index(i) for i in keep)
+            cur = TraAgg(cur, gb, get_kernel("matAdd"))
+            cur_idx = keep
+        if cur_idx != out_idx:
+            # permute both the block grid (rekey) and the block interiors
+            # (transform) to the rhs order
+            from repro.core.plan import TraTransform
+            inv = tuple(cur_idx.index(i) for i in out_idx)
+            tpose = Kernel(
+                name=f"einsum[{cur_idx}->{out_idx}]", arity=1,
+                apply=lambda a, s=f"...{cur_idx}->...{out_idx}":
+                    jnp.einsum(s, a),
+                out_bound=lambda b, p=inv: tuple(b[i] for i in p),
+                flops=lambda b: 0,
+            )
+            cur = TraTransform(cur, tpose)
+            cur = TraReKey(cur, lambda key, p=inv: tuple(key[i] for i in p),
+                           tag=f"permute{inv}")
+    return cur

@@ -1,0 +1,169 @@
+"""Plan interpreters: logical TRA, local IA, and distributed GSPMD IA.
+
+Three evaluation modes:
+
+* ``evaluate_tra``   — walk a logical plan with the dense eager ops.
+* ``evaluate_ia``    — walk a physical plan ignoring sites (semantics check:
+  a valid IA plan must equal its TRA source after projecting away sites).
+* ``evaluate_ia_spmd`` — production path.  The same walk, but every
+  ``BCAST``/``SHUF``/input placement becomes a sharding constraint inside a
+  single ``jit``; XLA emits the collective schedule that the placements
+  dictate (all-gather for BCAST, all-to-all for SHUF, reduce-scatter /
+  all-reduce for the two-phase-aggregation placements).
+
+A fourth mode — explicit shard_map collectives — lives in
+:mod:`repro.core.shardmap_exec`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import tra
+from repro.core.plan import (Bcast, IAInput, IANode, LocalAgg, LocalConcat,
+                             LocalFilter, LocalJoin, LocalMap, LocalTile,
+                             Placement, Shuf, TraAgg, TraConcat, TraFilter,
+                             TraInput, TraJoin, TraNode, TraReKey, TraTile,
+                             TraTransform, infer)
+from repro.core.tra import TensorRelation
+
+
+def evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
+                 _cache: Optional[dict] = None) -> TensorRelation:
+    cache = _cache if _cache is not None else {}
+    if id(node) in cache:
+        return cache[id(node)]
+
+    def rec(n):
+        return evaluate_tra(n, env, cache)
+
+    if isinstance(node, TraInput):
+        out = env[node.name]
+    elif isinstance(node, TraJoin):
+        out = tra.join(rec(node.left), rec(node.right),
+                       node.join_keys_l, node.join_keys_r, node.kernel)
+    elif isinstance(node, TraAgg):
+        out = tra.agg(rec(node.child), node.group_by, node.kernel)
+    elif isinstance(node, TraReKey):
+        out = tra.rekey(rec(node.child), node.key_func)
+    elif isinstance(node, TraFilter):
+        out = tra.filt(rec(node.child), node.bool_func)
+    elif isinstance(node, TraTransform):
+        out = tra.transform(rec(node.child), node.kernel)
+    elif isinstance(node, TraTile):
+        out = tra.tile(rec(node.child), node.tile_dim, node.tile_size)
+    elif isinstance(node, TraConcat):
+        out = tra.concat(rec(node.child), node.key_dim, node.array_dim)
+    else:
+        raise TypeError(type(node))
+    cache[id(node)] = out
+    return out
+
+
+def _pspec_for(placement: Optional[Placement], rtype) -> P:
+    """PartitionSpec over the dense layout ``key_shape + bound``."""
+    if placement is None or placement.is_replicated:
+        return P()
+    entries = []
+    for d in range(rtype.key_arity):
+        ax = placement.axis_of_dim(d)
+        entries.append(ax)
+    entries += [None] * rtype.rank
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
+                mesh: Optional[Mesh] = None,
+                spmd: bool = False,
+                _cache: Optional[dict] = None) -> TensorRelation:
+    """Evaluate a physical plan.
+
+    With ``spmd=True`` (requires ``mesh``) every placement-bearing node gets
+    a ``with_sharding_constraint`` so that, lowered under ``jit``, XLA
+    produces exactly the data movement the IA plan prescribes.
+    """
+    cache = _cache if _cache is not None else {}
+    if id(node) in cache:
+        return cache[id(node)]
+
+    def rec(n):
+        return evaluate_ia(n, env, mesh, spmd, cache)
+
+    def constrain(rel: TensorRelation, placement: Placement) -> TensorRelation:
+        if not spmd or mesh is None or placement is None:
+            return rel
+        if placement.has_duplicates:
+            # partial duplicates are a transient SPMD state; the pending
+            # reduction materializes at the next SHUF/BCAST constraint
+            return rel
+        spec = _pspec_for(placement, rel.rtype)
+        data = jax.lax.with_sharding_constraint(
+            rel.data, NamedSharding(mesh, spec))
+        return TensorRelation(data, rel.rtype, rel.mask)
+
+    if isinstance(node, IAInput):
+        out = constrain(env[node.name], node.placement)
+    elif isinstance(node, Bcast):
+        out = constrain(rec(node.child), Placement.replicated())
+    elif isinstance(node, Shuf):
+        out = constrain(rec(node.child),
+                        Placement.partitioned(node.part_dims, node.axes))
+    elif isinstance(node, LocalJoin):
+        out = tra.join(rec(node.left), rec(node.right),
+                       node.join_keys_l, node.join_keys_r, node.kernel)
+        ti = infer(node)
+        out = constrain(out, ti.placement)
+    elif isinstance(node, LocalAgg):
+        out = tra.agg(rec(node.child), node.group_by, node.kernel)
+        ti = infer(node)
+        out = constrain(out, ti.placement)
+    elif isinstance(node, LocalFilter):
+        out = tra.filt(rec(node.child), node.bool_func)
+    elif isinstance(node, LocalMap):
+        child = rec(node.child)
+        if node.kernel.name != "idOp":
+            child = tra.transform(child, node.kernel)
+        if node.key_func is not None:
+            child = tra.rekey(child, node.key_func)
+        out = child
+    elif isinstance(node, LocalTile):
+        out = tra.tile(rec(node.child), node.tile_dim, node.tile_size)
+    elif isinstance(node, LocalConcat):
+        out = tra.concat(rec(node.child), node.key_dim, node.array_dim)
+    else:
+        raise TypeError(type(node))
+    cache[id(node)] = out
+    return out
+
+
+def jit_ia_plan(root: IANode, mesh: Mesh,
+                input_order: Optional[list] = None) -> Callable:
+    """Build a jitted function ``(*arrays) -> array`` executing ``root``.
+
+    Input arrays arrive in ``input_order`` (names); shardings follow the
+    plan's input placements.  The returned callable is suitable for
+    ``.lower().compile()`` dry-runs and for real execution.
+    """
+    from repro.core.plan import postorder
+
+    inputs = [n for n in postorder(root) if isinstance(n, IAInput)]
+    by_name = {n.name: n for n in inputs}
+    names = input_order or sorted(by_name)
+
+    def fn(*arrays):
+        env = {}
+        for name, arr in zip(names, arrays):
+            node = by_name[name]
+            env[name] = TensorRelation(arr, node.rtype)
+        rel = evaluate_ia(root, env, mesh=mesh, spmd=True)
+        return rel.data
+
+    in_shardings = tuple(
+        NamedSharding(mesh, _pspec_for(by_name[n].placement, by_name[n].rtype))
+        for n in names)
+    return jax.jit(fn, in_shardings=in_shardings), names

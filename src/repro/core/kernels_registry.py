@@ -1,0 +1,318 @@
+"""Kernel-function registry for the TRA/IA.
+
+The paper's TRA is a family of *higher-order* functions: every algebra op
+takes a kernel function over plain arrays (in the paper: an MKL/CUDA kernel).
+Here kernels are jnp callables obeying one convention:
+
+    kernel.apply operates on the LAST ``rank`` dims of its operands and
+    broadcasts over any leading (key/batch) dims.
+
+That convention is what lets the dense executor evaluate a join by aligning
+key dims and issuing a *single* batched kernel call (which XLA then maps onto
+the MXU) instead of looping over tuples like the paper's Python engine.
+
+Each kernel carries the metadata the optimizer needs:
+  * ``out_bound``   — array-type inference (bound of the output),
+  * ``flops``       — exact flop count for the compute roofline term,
+  * ``is_associative``/``identity``/``reduce`` — for aggregation kernels,
+  * ``distributes_over`` — names of agg kernels it distributes over (R1-4 /
+    R1-7 side conditions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Bound = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """A named array kernel usable inside TRA/IA operations."""
+
+    name: str
+    arity: int                                  # 1 or 2 operand arrays
+    apply: Callable[..., jax.Array]
+    out_bound: Callable[..., Bound]             # (*bounds) -> bound
+    flops: Callable[..., int]                   # (*bounds) -> flop count
+    is_associative: bool = False                # usable as an agg kernel
+    identity: Optional[float] = None            # identity element for agg
+    reduce: Optional[Callable[[jax.Array, Tuple[int, ...]], jax.Array]] = None
+    distributes_over: Tuple[str, ...] = ()      # agg kernels f with k(f(a,b)) = f(k(a),k(b))
+
+    def __call__(self, *arrays: jax.Array) -> jax.Array:
+        return self.apply(*arrays)
+
+    def __repr__(self) -> str:  # keep plans printable
+        return f"Kernel<{self.name}>"
+
+
+_REGISTRY: dict[str, Kernel] = {}
+
+
+def register(kernel: Kernel) -> Kernel:
+    _REGISTRY[kernel.name] = kernel
+    return kernel
+
+
+def get_kernel(name: str) -> Kernel:
+    try:
+        return _REGISTRY[name]
+    except KeyError as exc:
+        raise KeyError(
+            f"unknown kernel {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from exc
+
+
+def registered_kernels() -> Sequence[str]:
+    return sorted(_REGISTRY)
+
+
+def _prod(xs: Sequence[int]) -> int:
+    return math.prod(xs) if xs else 1
+
+
+def _same_bound(*bounds: Bound) -> Bound:
+    first = bounds[0]
+    for b in bounds[1:]:
+        if tuple(b) != tuple(first):
+            raise ValueError(f"bound mismatch: {bounds}")
+    return tuple(first)
+
+
+# --------------------------------------------------------------------------
+# Elementwise binary kernels
+# --------------------------------------------------------------------------
+
+matAdd = register(Kernel(
+    name="matAdd", arity=2,
+    apply=lambda a, b: a + b,
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
+    is_associative=True, identity=0.0,
+    reduce=lambda x, axes: jnp.sum(x, axis=axes),
+))
+
+matSub = register(Kernel(
+    name="matSub", arity=2,
+    apply=lambda a, b: a - b,
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
+))
+
+elemMul = register(Kernel(
+    name="elemMul", arity=2,
+    apply=lambda a, b: a * b,
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
+    is_associative=True, identity=1.0,
+    reduce=lambda x, axes: jnp.prod(x, axis=axes),
+))
+
+elemMax = register(Kernel(
+    name="elemMax", arity=2,
+    apply=lambda a, b: jnp.maximum(a, b),
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
+    is_associative=True, identity=-jnp.inf,
+    reduce=lambda x, axes: jnp.max(x, axis=axes),
+))
+
+elemMin = register(Kernel(
+    name="elemMin", arity=2,
+    apply=lambda a, b: jnp.minimum(a, b),
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
+    is_associative=True, identity=jnp.inf,
+    reduce=lambda x, axes: jnp.min(x, axis=axes),
+))
+
+
+# --------------------------------------------------------------------------
+# Matmul family (rank-2 bounds). flops are 2*m*k*n (mult + add).
+# --------------------------------------------------------------------------
+
+def _mm_bound(bl: Bound, br: Bound) -> Bound:
+    if len(bl) != 2 or len(br) != 2 or bl[1] != br[0]:
+        raise ValueError(f"matMul bound mismatch {bl} x {br}")
+    return (bl[0], br[1])
+
+
+matMul = register(Kernel(
+    name="matMul", arity=2,
+    apply=lambda a, b: jnp.matmul(a, b),
+    out_bound=_mm_bound,
+    flops=lambda bl, br: 2 * bl[0] * bl[1] * br[1],
+))
+
+# A^T @ B  (the backprop weight-gradient kernel of paper §5.3)
+matTranMulL = register(Kernel(
+    name="matTranMulL", arity=2,
+    apply=lambda a, b: jnp.einsum("...ij,...ik->...jk", a, b),
+    out_bound=lambda bl, br: (bl[1], br[1]),
+    flops=lambda bl, br: 2 * bl[0] * bl[1] * br[1],
+))
+
+# A @ B^T  (the backprop activation-gradient kernel of paper §5.3)
+matTranMulR = register(Kernel(
+    name="matTranMulR", arity=2,
+    apply=lambda a, b: jnp.einsum("...ij,...kj->...ik", a, b),
+    out_bound=lambda bl, br: (bl[0], br[0]),
+    flops=lambda bl, br: 2 * bl[0] * bl[1] * br[0],
+))
+
+# x (row vector batch) - X : matrix-vector subtraction from paper §5.2
+matVecSub = register(Kernel(
+    name="matVecSub", arity=2,
+    apply=lambda q, x: q - x,
+    out_bound=lambda bq, bx: bx,
+    flops=lambda bq, bx: _prod(bx),
+))
+
+
+# --------------------------------------------------------------------------
+# Unary kernels
+# --------------------------------------------------------------------------
+
+idOp = register(Kernel(
+    name="idOp", arity=1,
+    apply=lambda a: a,
+    out_bound=lambda b: tuple(b),
+    flops=lambda b: 0,
+    distributes_over=("matAdd", "elemMul", "elemMax", "elemMin"),
+))
+
+relu = register(Kernel(
+    name="relu", arity=1,
+    apply=lambda a: jnp.maximum(a, 0.0),
+    out_bound=lambda b: tuple(b),
+    flops=lambda b: _prod(b),
+))
+
+reluGrad = register(Kernel(
+    name="reluGrad", arity=1,
+    apply=lambda a: (a > 0.0).astype(a.dtype),
+    out_bound=lambda b: tuple(b),
+    flops=lambda b: _prod(b),
+))
+
+sigmoid = register(Kernel(
+    name="sigmoid", arity=1,
+    apply=lambda a: jax.nn.sigmoid(a),
+    out_bound=lambda b: tuple(b),
+    flops=lambda b: 4 * _prod(b),
+))
+
+def _diag(a: jax.Array) -> jax.Array:
+    # diagonal of the last two dims, batched over leading dims
+    return jnp.diagonal(a, axis1=-2, axis2=-1)
+
+diag = register(Kernel(
+    name="diag", arity=1,
+    apply=_diag,
+    out_bound=lambda b: (min(b[-2], b[-1]),),
+    flops=lambda b: 0,
+    # diag(A + B) == diag(A) + diag(B): exactly the paper's R1-7 example.
+    distributes_over=("matAdd",),
+))
+
+rowSum = register(Kernel(
+    name="rowSum", arity=1,
+    apply=lambda a: jnp.sum(a, axis=-1),
+    out_bound=lambda b: tuple(b[:-1]),
+    flops=lambda b: _prod(b),
+    distributes_over=("matAdd",),
+))
+
+
+def make_scale_mul(eta: float) -> Kernel:
+    """scaleMul_(eta) from paper §5.3 — parameterized, hence a factory."""
+    return Kernel(
+        name=f"scaleMul({eta})", arity=1,
+        apply=lambda a: a * eta,
+        out_bound=lambda b: tuple(b),
+        flops=lambda b: _prod(b),
+        distributes_over=("matAdd",),
+    )
+
+
+def make_transpose() -> Kernel:
+    return Kernel(
+        name="transpose", arity=1,
+        apply=lambda a: jnp.swapaxes(a, -1, -2),
+        out_bound=lambda b: (b[-1], b[-2]),
+        flops=lambda b: 0,
+        distributes_over=(),
+    )
+
+
+transpose = register(make_transpose())
+
+
+# --------------------------------------------------------------------------
+# (value, index) argmin machinery for the paper's §5.2 nearest-neighbour
+# search.  ``toValIdx`` turns a (rows,) distance block into a (2,) array of
+# [min_value, global_row_index]; ``minIndex`` is the associative combiner.
+# --------------------------------------------------------------------------
+
+def make_to_val_idx(rows_per_block: int) -> Kernel:
+    def _apply(a: jax.Array) -> jax.Array:
+        idx = jnp.argmin(a, axis=-1)
+        val = jnp.min(a, axis=-1)
+        return jnp.stack([val, idx.astype(a.dtype)], axis=-1)
+
+    return Kernel(
+        name=f"toValIdx({rows_per_block})", arity=1,
+        apply=_apply,
+        out_bound=lambda b: (2,),
+        flops=lambda b: _prod(b),
+    )
+
+
+def _min_index(a: jax.Array, b: jax.Array) -> jax.Array:
+    take_a = a[..., 0] <= b[..., 0]
+    return jnp.where(take_a[..., None], a, b)
+
+
+minIndex = register(Kernel(
+    name="minIndex", arity=2,
+    apply=_min_index,
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
+    is_associative=True,
+))
+
+
+# --------------------------------------------------------------------------
+# Structural kernels used by Tile / Concat / replication (λ^L multi-map)
+# --------------------------------------------------------------------------
+
+def compose(outer: Kernel, inner: Kernel) -> Kernel:
+    """Kernel composition (outer ∘ inner) — used by rules R1-2/R1-4/R1-7."""
+    if inner.arity == 1:
+        app = lambda *xs: outer.apply(inner.apply(*xs)) if outer.arity == 1 \
+            else None
+        if outer.arity != 1:
+            raise ValueError("compose: outer of unary must be unary")
+        return Kernel(
+            name=f"{outer.name}∘{inner.name}", arity=1,
+            apply=lambda a: outer.apply(inner.apply(a)),
+            out_bound=lambda b: outer.out_bound(inner.out_bound(b)),
+            flops=lambda b: inner.flops(b) + outer.flops(inner.out_bound(b)),
+            distributes_over=tuple(
+                set(outer.distributes_over) & set(inner.distributes_over)),
+        )
+    # outer unary applied to the result of a binary kernel
+    if outer.arity != 1 or inner.arity != 2:
+        raise ValueError("compose supports unary∘unary or unary∘binary")
+    return Kernel(
+        name=f"{outer.name}∘{inner.name}", arity=2,
+        apply=lambda a, b: outer.apply(inner.apply(a, b)),
+        out_bound=lambda bl, br: outer.out_bound(inner.out_bound(bl, br)),
+        flops=lambda bl, br: inner.flops(bl, br)
+        + outer.flops(inner.out_bound(bl, br)),
+    )

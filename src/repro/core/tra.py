@@ -1,0 +1,418 @@
+"""Tensor relations and eager TRA operations (paper §2).
+
+Representation
+--------------
+The paper's integrity constraints (key *uniqueness* + *continuity*) make a
+tensor relation of type ``R^(k, r, b)`` with frontier ``f`` isomorphic to a
+dense array of shape ``f ++ b`` — keys become the leading ``k`` axes.  That
+is exactly the representation used here, so the whole algebra stays inside
+jnp and can be jit/pjit-ed.
+
+Relations that pass through ``σ`` (filter) or a non-bijective ``ReKey`` can
+violate continuity ("holes").  Keys are *static* metadata (frontiers are
+known at trace time), so holes are represented by a static numpy boolean
+``mask`` over the key grid — no dynamic shapes are ever needed, matching the
+paper's observation that cardinalities are exact, never estimated.
+
+Two executors share this module:
+  * the dense jnp ops below (production path, jit-able),
+  * :mod:`repro.core.reference` — a dict-of-numpy tuple-at-a-time oracle used
+    by the hypothesis property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_registry import Kernel
+
+KeyFunc = Callable[[Tuple[int, ...]], Tuple[int, ...]]
+BoolFunc = Callable[[Tuple[int, ...]], bool]
+
+
+@dataclasses.dataclass(frozen=True)
+class RelType:
+    """Static type of a tensor relation: key frontier + array bound."""
+
+    key_shape: Tuple[int, ...]   # frontier f  (exact, by continuity)
+    bound: Tuple[int, ...]       # array bound b
+    dtype: object = jnp.float32
+
+    @property
+    def key_arity(self) -> int:
+        return len(self.key_shape)
+
+    @property
+    def rank(self) -> int:
+        return len(self.bound)
+
+    @property
+    def ntuples(self) -> int:
+        return math.prod(self.key_shape) if self.key_shape else 1
+
+    @property
+    def nfloats(self) -> int:
+        """Total scalar payload — the paper's exact ``n × ∏ b_i``."""
+        return self.ntuples * (math.prod(self.bound) if self.bound else 1)
+
+    def with_key_shape(self, ks: Sequence[int]) -> "RelType":
+        return dataclasses.replace(self, key_shape=tuple(ks))
+
+    def with_bound(self, b: Sequence[int]) -> "RelType":
+        return dataclasses.replace(self, bound=tuple(b))
+
+
+@dataclasses.dataclass
+class TensorRelation:
+    """A dense-backed tensor relation value."""
+
+    data: jax.Array              # shape = key_shape + bound
+    rtype: RelType
+    mask: Optional[np.ndarray] = None   # static validity grid or None (=all)
+
+    def __post_init__(self) -> None:
+        expect = tuple(self.rtype.key_shape) + tuple(self.rtype.bound)
+        if tuple(self.data.shape) != expect:
+            raise ValueError(
+                f"data shape {self.data.shape} != type shape {expect}")
+        if self.mask is not None and self.mask.shape != self.rtype.key_shape:
+            raise ValueError("mask shape mismatch")
+
+    # -- conveniences -----------------------------------------------------
+    @property
+    def key_shape(self) -> Tuple[int, ...]:
+        return self.rtype.key_shape
+
+    @property
+    def bound(self) -> Tuple[int, ...]:
+        return self.rtype.bound
+
+    def is_continuous(self) -> bool:
+        return self.mask is None or bool(np.all(self.mask))
+
+    def valid_keys(self) -> np.ndarray:
+        """(n, k) int array of valid keys, row-major order."""
+        if not self.key_shape:
+            return np.zeros((1, 0), np.int64)
+        grid = np.indices(self.key_shape).reshape(len(self.key_shape), -1).T
+        if self.mask is None:
+            return grid
+        return grid[self.mask.reshape(-1)]
+
+    def to_dict(self) -> dict:
+        """Materialize as {key tuple: np.ndarray} (reference format)."""
+        out = {}
+        data = np.asarray(self.data)
+        for key in self.valid_keys():
+            out[tuple(int(x) for x in key)] = data[tuple(key)]
+        return out
+
+
+def _full_mask_and(a: Optional[np.ndarray], b: Optional[np.ndarray],
+                   shape: Tuple[int, ...]) -> Optional[np.ndarray]:
+    if a is None and b is None:
+        return None
+    aa = np.broadcast_to(a if a is not None else True, shape)
+    bb = np.broadcast_to(b if b is not None else True, shape)
+    return np.logical_and(aa, bb)
+
+
+# ==========================================================================
+# Constructors
+# ==========================================================================
+
+def from_tensor(tensor: jax.Array, tile: Sequence[int]) -> TensorRelation:
+    """Chunk a dense tensor into a tensor relation with block-index keys.
+
+    ``tile[d]`` is the block size along tensor dim ``d`` (must divide the
+    dim).  Keys are block coordinates; arrays are the blocks.
+    """
+    tile = tuple(tile)
+    if len(tile) != tensor.ndim:
+        raise ValueError("tile rank mismatch")
+    key_shape = []
+    for d, t in enumerate(tile):
+        if tensor.shape[d] % t:
+            raise ValueError(f"dim {d} ({tensor.shape[d]}) not divisible by {t}")
+        key_shape.append(tensor.shape[d] // t)
+    # reshape (k0, t0, k1, t1, ...) then move key axes to the front
+    interleaved = []
+    for k, t in zip(key_shape, tile):
+        interleaved += [k, t]
+    x = tensor.reshape(interleaved)
+    perm = list(range(0, 2 * len(tile), 2)) + list(range(1, 2 * len(tile), 2))
+    x = jnp.transpose(x, perm)
+    rt = RelType(tuple(key_shape), tile, tensor.dtype)
+    return TensorRelation(x, rt)
+
+
+def to_tensor(rel: TensorRelation,
+              key_dims: Optional[Sequence[int]] = None) -> jax.Array:
+    """Reassemble a continuous relation into a dense tensor.
+
+    ``key_dims[i]`` names the array dim that key dim ``i`` blocks along
+    (default: the identity, requiring key arity == rank).
+    """
+    if not rel.is_continuous():
+        raise ValueError("cannot reassemble a relation with holes")
+    k, r = rel.rtype.key_arity, rel.rtype.rank
+    if key_dims is None:
+        if k != r:
+            raise ValueError(f"key arity {k} != rank {r}; pass key_dims")
+        key_dims = tuple(range(k))
+    key_dims = tuple(key_dims)
+    if len(key_dims) != k or len(set(key_dims)) != k:
+        raise ValueError("key_dims must name each key dim once")
+    # interleave: for each array dim, optionally prefix its key dim
+    perm = []
+    shape = []
+    for d in range(r):
+        if d in key_dims:
+            perm.append(key_dims.index(d))
+            shape.append(rel.key_shape[key_dims.index(d)] * rel.bound[d])
+        else:
+            shape.append(rel.bound[d])
+        perm.append(k + d)
+    x = jnp.transpose(rel.data, perm)
+    return x.reshape(shape)
+
+
+# ==========================================================================
+# TRA operations (eager, dense)
+# ==========================================================================
+
+def join(left: TensorRelation, right: TensorRelation,
+         join_keys_l: Sequence[int], join_keys_r: Sequence[int],
+         kernel: Kernel) -> TensorRelation:
+    """⋈_(joinKeysL, joinKeysR, projOp)(L, R).
+
+    Output keys: all left keys (original order) then right keys with the
+    joined dims dropped — the paper's natural-join convention.
+    """
+    jkl, jkr = tuple(join_keys_l), tuple(join_keys_r)
+    if len(jkl) != len(jkr):
+        raise ValueError("join key lists must have equal length")
+    kl = left.rtype.key_arity
+    kr = right.rtype.key_arity
+    r_nonjoin = [d for d in range(kr) if d not in jkr]
+
+    # equi-join on a dense grid: valid range of a joined dim is the min of
+    # the two frontiers (paper §4.3 rule 1)
+    f_out_l = list(left.key_shape)
+    for i, dl in enumerate(jkl):
+        f_out_l[dl] = min(left.key_shape[dl], right.key_shape[jkr[i]])
+    ldata = left.data[tuple(slice(0, f) for f in f_out_l)]
+    lmask = None if left.mask is None else \
+        left.mask[tuple(slice(0, f) for f in f_out_l)]
+
+    r_slices = [slice(None)] * kr
+    for i, dr in enumerate(jkr):
+        r_slices[dr] = slice(0, f_out_l[jkl[i]])
+    rdata = right.data[tuple(r_slices)]
+    rmask = None if right.mask is None else right.mask[tuple(r_slices)]
+
+    out_key_shape = tuple(f_out_l) + tuple(rdata.shape[d] for d in r_nonjoin)
+    k_out = len(out_key_shape)
+
+    # Align RIGHT onto the output key axes:
+    #   joined right dim jkr[i]   -> output axis jkl[i]
+    #   non-joined right dim d    -> output axis kl + (index in r_nonjoin)
+    out_axis_of_rdim = {}
+    for i, dr in enumerate(jkr):
+        out_axis_of_rdim[dr] = jkl[i]
+    for i, dr in enumerate(r_nonjoin):
+        out_axis_of_rdim[dr] = kl + i
+    order = sorted(range(kr), key=lambda d: out_axis_of_rdim[d])
+    rdata_t = jnp.moveaxis(rdata, list(range(kr)),
+                           [order.index(d) for d in range(kr)])
+    rmask_t = None if rmask is None else np.moveaxis(
+        rmask, list(range(kr)), [order.index(d) for d in range(kr)])
+    # insert singleton axes for output key axes not covered by the right
+    covered = sorted(out_axis_of_rdim.values())
+    r_shape = []
+    ci = 0
+    for ax in range(k_out):
+        if ci < len(covered) and covered[ci] == ax:
+            r_shape.append(rdata_t.shape[ci])
+            ci += 1
+        else:
+            r_shape.append(1)
+    rdata_b = rdata_t.reshape(tuple(r_shape) + tuple(right.bound))
+    rmask_b = None if rmask_t is None else rmask_t.reshape(tuple(r_shape))
+
+    # left occupies the first kl output axes
+    ldata_b = ldata.reshape(tuple(f_out_l) + (1,) * (k_out - kl)
+                            + tuple(left.bound))
+
+    lb = jnp.broadcast_to(ldata_b, out_key_shape + tuple(left.bound))
+    rb = jnp.broadcast_to(rdata_b, out_key_shape + tuple(right.bound))
+    out = kernel.apply(lb, rb)
+
+    out_bound = kernel.out_bound(left.bound, right.bound)
+    rt = RelType(out_key_shape, tuple(out_bound), out.dtype)
+    lmask_b = None if lmask is None else lmask.reshape(
+        tuple(f_out_l) + (1,) * (k_out - kl))
+    mask = _full_mask_and(lmask_b, rmask_b, out_key_shape)
+    return TensorRelation(out, rt, mask)
+
+
+def _tree_fold(blocks: jax.Array, kernel: Kernel) -> jax.Array:
+    """Fold axis 0 of ``blocks`` with an associative binary kernel."""
+    n = blocks.shape[0]
+    while n > 1:
+        half = n // 2
+        a = blocks[:half]
+        b = blocks[half:2 * half]
+        merged = kernel.apply(a, b)
+        if n % 2:
+            merged = jnp.concatenate([merged, blocks[2 * half:n]], axis=0)
+        blocks = merged
+        n = blocks.shape[0]
+    return blocks[0]
+
+
+def agg(rel: TensorRelation, group_by: Sequence[int],
+        kernel: Kernel) -> TensorRelation:
+    """Σ_(groupByKeys, aggOp)(R)."""
+    if not kernel.is_associative:
+        raise ValueError(f"agg kernel {kernel.name} must be associative")
+    gb = tuple(group_by)
+    k = rel.rtype.key_arity
+    reduce_dims = tuple(d for d in range(k) if d not in gb)
+    # reorder keys: group-by dims (in requested order) first
+    perm = list(gb) + list(reduce_dims)
+    data = jnp.moveaxis(rel.data, perm, list(range(k)))
+    out_key_shape = tuple(rel.key_shape[d] for d in gb)
+
+    mask = rel.mask
+    if mask is not None:
+        mask_t = np.moveaxis(mask, perm, list(range(k)))
+        if kernel.identity is None:
+            raise ValueError(
+                f"agg over holes needs identity for {kernel.name}")
+        fill = jnp.asarray(kernel.identity, dtype=data.dtype)
+        mb = mask_t.reshape(mask_t.shape + (1,) * rel.rtype.rank)
+        data = jnp.where(jnp.asarray(mb), data, fill)
+        out_mask = np.any(mask_t, axis=tuple(range(len(gb), k))) \
+            if reduce_dims else mask_t
+        if np.all(out_mask):
+            out_mask = None
+    else:
+        out_mask = None
+
+    axes = tuple(range(len(gb), k))
+    if not axes:
+        out = data
+    elif kernel.reduce is not None:
+        out = kernel.reduce(data, axes)
+    else:
+        flat = data.reshape(out_key_shape + (-1,) + tuple(rel.bound))
+        flat = jnp.moveaxis(flat, len(gb), 0)
+        out = _tree_fold(flat, kernel)
+    rt = RelType(out_key_shape, rel.bound, out.dtype)
+    return TensorRelation(out, rt, out_mask)
+
+
+def rekey(rel: TensorRelation, key_func: KeyFunc,
+          out_arity: Optional[int] = None) -> TensorRelation:
+    """ReKey_(keyFunc)(R) — keys are static, so this is a static scatter."""
+    keys = rel.valid_keys()
+    new_keys = np.asarray([key_func(tuple(int(x) for x in k)) for k in keys],
+                          dtype=np.int64)
+    if new_keys.ndim == 1:
+        new_keys = new_keys[:, None]
+    if out_arity is not None and new_keys.shape[1] != out_arity:
+        raise ValueError("key_func arity mismatch")
+    if len(new_keys) == 0:
+        raise ValueError("rekey of an empty relation")
+    uniq = {tuple(k) for k in new_keys.tolist()}
+    if len(uniq) != len(new_keys):
+        raise ValueError("rekey produced duplicate keys (uniqueness violated)")
+    f_out = tuple(int(m) + 1 for m in new_keys.max(axis=0))
+    flat_src = np.ravel_multi_index(keys.T, rel.key_shape) if rel.key_shape \
+        else np.zeros(1, np.int64)
+    src = rel.data.reshape((-1,) + tuple(rel.bound))[flat_src]
+    out = jnp.zeros(f_out + tuple(rel.bound), rel.data.dtype)
+    out = out.at[tuple(new_keys.T)].set(src)
+    mask = np.zeros(f_out, bool)
+    mask[tuple(new_keys.T)] = True
+    if np.all(mask):
+        mask = None
+    rt = RelType(f_out, rel.bound, rel.data.dtype)
+    return TensorRelation(out, rt, mask)
+
+
+def filt(rel: TensorRelation, bool_func: BoolFunc) -> TensorRelation:
+    """σ_(boolFunc)(R) — static key predicate ⇒ static mask update."""
+    grid = np.indices(rel.key_shape).reshape(rel.rtype.key_arity, -1).T
+    keep = np.asarray([bool(bool_func(tuple(int(x) for x in k)))
+                       for k in grid]).reshape(rel.key_shape)
+    mask = keep if rel.mask is None else np.logical_and(rel.mask, keep)
+    if not mask.any():
+        raise ValueError("filter removed every tuple")
+    # frontier shrink (paper §4.3 rule 3): slice to the bounding box
+    idx = np.argwhere(mask)
+    f_out = tuple(int(m) + 1 for m in idx.max(axis=0))
+    sl = tuple(slice(0, f) for f in f_out)
+    data = rel.data[sl]
+    mask = mask[sl]
+    if np.all(mask):
+        mask = None
+    rt = RelType(f_out, rel.bound, rel.data.dtype)
+    return TensorRelation(data, rt, mask)
+
+
+def transform(rel: TensorRelation, kernel: Kernel) -> TensorRelation:
+    """λ_(transformFunc)(R)."""
+    out = kernel.apply(rel.data)
+    out_bound = tuple(kernel.out_bound(rel.bound))
+    rt = RelType(rel.key_shape, out_bound, out.dtype)
+    return TensorRelation(out, rt, rel.mask)
+
+
+def tile(rel: TensorRelation, tile_dim: int, tile_size: int) -> TensorRelation:
+    """Tile_(tileDim, tileSize)(R) — split an array dim, append a key dim."""
+    b = rel.bound
+    if b[tile_dim] % tile_size:
+        raise ValueError("tile size must divide the bound")
+    ntiles = b[tile_dim] // tile_size
+    k = rel.rtype.key_arity
+    ax = k + tile_dim
+    shape = (rel.key_shape + b[:tile_dim] + (ntiles, tile_size)
+             + b[tile_dim + 1:])
+    x = rel.data.reshape(shape)
+    x = jnp.moveaxis(x, ax, k)          # new key dim appended after keys
+    new_bound = b[:tile_dim] + (tile_size,) + b[tile_dim + 1:]
+    rt = RelType(rel.key_shape + (ntiles,), new_bound, rel.data.dtype)
+    mask = None
+    if rel.mask is not None:
+        mask = np.repeat(rel.mask[..., None], ntiles, axis=-1)
+    return TensorRelation(x, rt, mask)
+
+
+def concat(rel: TensorRelation, key_dim: int, array_dim: int) -> TensorRelation:
+    """Concat_(keyDim, arrayDim)(R) — inverse of tile."""
+    if rel.mask is not None:
+        mt = np.moveaxis(rel.mask, key_dim, -1)
+        if not (np.all(mt == mt[..., :1])):
+            raise ValueError("concat groups must be complete")
+    k = rel.rtype.key_arity
+    x = jnp.moveaxis(rel.data, key_dim, k - 1 + array_dim)
+    # now the concat key dim sits immediately before the target array axis
+    new_key_shape = tuple(s for d, s in enumerate(rel.key_shape)
+                          if d != key_dim)
+    nb = list(rel.bound)
+    nb[array_dim] = rel.key_shape[key_dim] * rel.bound[array_dim]
+    x = x.reshape(new_key_shape + tuple(nb))
+    mask = None
+    if rel.mask is not None:
+        mask = np.take(rel.mask, 0, axis=key_dim)
+        if np.all(mask):
+            mask = None
+    rt = RelType(new_key_shape, tuple(nb), rel.data.dtype)
+    return TensorRelation(x, rt, mask)

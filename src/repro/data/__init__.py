@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, DataLoader, make_batch
+
+__all__ = ["DataConfig", "DataLoader", "make_batch"]

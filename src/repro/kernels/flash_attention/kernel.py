@@ -1,0 +1,136 @@
+"""Flash-attention Pallas TPU kernel (online softmax, causal/windowed/GQA).
+
+Adaptation notes (GPU flash-attention → TPU):
+  * no warp-level shuffles — the online-softmax running stats (m, l) live in
+    VMEM scratch tiles shaped ``(block_q, 128)`` so reductions stay in the
+    lane-aligned layout the VPU wants;
+  * the KV sweep is the innermost grid dim, so the accumulator tile persists
+    in VMEM across it (same accumulation idiom as the matmul kernel);
+  * GQA is an *index-map* property: query head ``h`` reads KV head
+    ``h // group`` — no gather, no replication in HBM;
+  * supports causal masking, sliding windows (gemma2 local layers) and
+    logit soft-capping (gemma2) so one kernel serves every assigned arch.
+
+Causally-skippable KV blocks are masked rather than skipped; on TPU the
+grid must be static, and for the prefill shapes we target the masked
+fraction is amortized by the 128-wide lanes.  (A `pl.when` early-out still
+avoids the two matmuls for fully-masked blocks.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  nkv: int, block_q: int, block_kv: int, scale: float,
+                  causal: bool, window: int, softcap: float):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    kv_start = ikv * block_kv
+    # block-level early-out for fully-masked (future) KV blocks
+    needed = True
+    if causal:
+        needed = kv_start <= q_start + block_q - 1
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                  # (bq, bkv)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        cols = kv_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (rows >= cols)
+        if window > 0:
+            mask = mask & (rows - cols < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)      # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bkv)
+        # fully-masked rows: keep p exactly zero (m_new == NEG_INF)
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    if causal:
+        pl.when(needed)(body)
+    else:
+        body()
+
+    @pl.when(ikv == nkv - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                # all-masked rows → 0
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, scale: float | None = None,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """Attention over ``q (B,Hq,S,D)``, ``k/v (B,Hkv,S,D)``; GQA by ratio."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"GQA ratio must be integral: {hq} vs {hkv}")
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    if sq % block_q or skv % block_kv:
+        raise ValueError("sequence must divide block size (pad in ops.py)")
+    grid = (b, hq, sq // block_q, skv // block_kv)
+    kernel = functools.partial(
+        _flash_kernel, nkv=grid[3], block_q=block_q, block_kv=block_kv,
+        scale=scale, causal=causal, window=window, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, i, j, g=group: (bb, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, i, j, g=group: (bb, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,91 @@
+"""Public attention op with pallas/jnp dispatch.
+
+The Pallas kernel targets self-attention (sq == skv — training/prefill).
+Decode (sq=1 against a long KV cache) stays on the jnp path: a single-row
+softmax is bandwidth-bound gather+GEMV work that XLA already emits
+optimally, and a bq=1 tile would waste the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _blockwise_jnp(q, k, v, *, causal, window, softcap, scale,
+                   block_q: int = 512):
+    """Flash-structured attention in plain jnp: map over query blocks
+    with a rematerialized block body, so peak temp is one block's scores
+    (B, H, bq, S) rather than the full (B, H, S, S) matrix.  This is what
+    the dry-run lowers on CPU for long sequences; on TPU the Pallas
+    kernel replaces it."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]                     # MLA: v head dim may differ
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    nq = -(-sq // block_q)
+    pad = nq * block_q - sq
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qs = qp.reshape(b, hq, nq, block_q, d).transpose(2, 0, 1, 3, 4)
+    kg = k.reshape(b, hkv, 1, skv, d)
+    vg = v.reshape(b, hkv, 1, skv, dv)
+
+    @jax.checkpoint
+    def block(qi, i0):
+        qf = qi.astype(jnp.float32).reshape(b, hkv, group, block_q, d)
+        s = jnp.einsum("bkgqd,bkzsd->bkgqs", qf,
+                       kg.astype(jnp.float32)) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = i0 + jnp.arange(block_q)[:, None] + (skv - sq)
+        cols = jnp.arange(skv)[None, :]
+        mask = jnp.ones((block_q, skv), bool)
+        if causal:
+            mask = mask & (rows >= cols)
+        if window > 0:
+            mask = mask & (rows - cols < window)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        o = jnp.einsum("bkgqs,bkzsd->bkgqd", p, vg.astype(jnp.float32))
+        return o.reshape(b, hq, block_q, dv).astype(q.dtype)
+
+    outs = jax.lax.map(lambda args: block(args[0], args[1]),
+                       (qs, jnp.arange(nq) * block_q))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, nq * block_q, dv)
+    return o[:, :, :sq]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "impl", "block_q", "block_kv",
+    "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, scale=None, impl: str = "auto",
+              block_q: int = 128, block_kv: int = 128,
+              interpret: bool = False):
+    if impl == "auto":
+        if jax.default_backend() == "tpu" and q.shape[2] == k.shape[2] \
+                and q.shape[2] >= 128:
+            impl = "pallas"
+        elif k.shape[2] > 1024:
+            impl = "jnp_blockwise"
+        else:
+            impl = "jnp"
+    if impl == "jnp":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+    if impl == "jnp_blockwise":
+        return _blockwise_jnp(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+    if impl != "pallas":
+        raise ValueError(impl)
+    if q.shape[2] != k.shape[2]:
+        raise ValueError("pallas path requires sq == skv (self-attention)")
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)

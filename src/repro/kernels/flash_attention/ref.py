@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0,
+                  scale: float | None = None) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(sq)[:, None] + (skv - sq)   # align ends for decode
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (rows >= cols)
+    if window > 0:
+        mask = mask & (rows - cols < window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

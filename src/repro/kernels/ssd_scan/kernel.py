@@ -1,0 +1,99 @@
+"""Chunked SSD (Mamba2) Pallas TPU kernel.
+
+The SSD duality says the recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_tᵀ ;   y_t = C_t · h_t
+
+splits, for a chunk of length L, into matmul-shaped work the MXU likes:
+
+    within-chunk (quadratic, L×L):  Y_intra = (M ⊙ (C Bᵀ)) (dt ⊙ X)
+       with M_ij = exp(a_i - a_j)·1[i ≥ j],  a = cumsum(dt·A)
+    chunk state:  S_c = Σ_j exp(a_L - a_j) dt_j B_j ⊗ x_j        (N×P)
+    across chunks (linear scan):  h ← h·exp(a_L) + S_c ;
+       Y_inter,i = exp(a_i) C_i · h_prev
+
+Grid is ``(B, H, n_chunks)`` with the chunk dim innermost-sequential so the
+running state ``h`` persists in a VMEM scratch tile across chunk steps —
+the TPU-idiomatic replacement for the GPU version's inter-block shared
+memory handoff.  All matmuls run in f32 on (L×L)/(L×N)/(N×P) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hstate, *,
+                nchunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        hstate[...] = jnp.zeros_like(hstate)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    A = a_ref[0].astype(jnp.float32)                 # scalar decay rate
+    Bm = b_ref[0].astype(jnp.float32)                # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (L, N)
+
+    da = dt * A                                      # (L,)
+    a_cs = jnp.cumsum(da)                            # (L,) inclusive
+    L = x.shape[0]
+
+    # ---- within-chunk (quadratic) term --------------------------------
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # (L,L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    # decay from step j to step i (i ≥ j): exp(a_i - a_j); mask BEFORE the
+    # exp so the discarded upper triangle cannot overflow to inf
+    diff = jnp.where(ii >= jj, a_cs[:, None] - a_cs[None, :], 0.0)
+    m = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    xdt = x * dt[:, None]                            # (L, P)
+    y = jnp.dot(scores * m, xdt, preferred_element_type=jnp.float32)
+
+    # ---- contribution of the carried state ----------------------------
+    # y_inter_i = exp(a_i) * C_i · h_prev
+    y += jnp.exp(a_cs)[:, None] * jnp.dot(
+        Cm, hstate[...], preferred_element_type=jnp.float32)
+
+    # ---- update carried state ------------------------------------------
+    # S_c = Σ_j exp(a_L - a_j) dt_j B_j x_jᵀ ;  h ← h exp(a_L) + S_c
+    w = jnp.exp(a_cs[-1] - a_cs)[:, None] * Bm       # (L, N)
+    s_c = jnp.dot(w.T, xdt, preferred_element_type=jnp.float32)  # (N, P)
+    hstate[...] = hstate[...] * jnp.exp(a_cs[-1]) + s_c
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """Chunked SSD forward: x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,N)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError("sequence must divide chunk (pad in ops.py)")
+    grid = (b, h, s // chunk)
+    kernel = functools.partial(_ssd_kernel, nchunks=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, cc: (bb, cc, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, cc: (bb, cc, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, cc: (bb, cc, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p),
+                               lambda bb, hh, cc: (bb, cc, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

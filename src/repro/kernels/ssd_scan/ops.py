@@ -1,0 +1,124 @@
+"""Public SSD op with pallas/jnp dispatch + the O(1) decode step.
+
+The jnp fallback uses the same *chunked* math as the kernel (matmul form),
+not the sequential scan, so the dry-run lowers to MXU-shaped HLO on every
+backend; ``ssd_ref`` (sequential) remains the correctness oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _ssd_chunked_jnp(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD in plain jnp (same algorithm as the Pallas kernel).
+
+    Scans over chunks (the kernel's sequential grid dim) so peak temp is
+    one chunk's intra-chunk tile — (b, L, L, h) — instead of all chunks'
+    at once; XLA fuses the per-chunk einsums the same way the Pallas
+    kernel tiles them in VMEM.
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    dtype = x.dtype
+    c = s // chunk
+    xf = x.astype(jnp.float32).reshape(b, c, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, c, chunk, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, c, chunk, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, c, chunk, n)
+    Af = A.astype(jnp.float32)
+    ii = jnp.arange(chunk)[:, None]
+    jj = jnp.arange(chunk)[None, :]
+    tri = (ii >= jj)[None, :, :, None]                 # (1,L,L,1)
+
+    def step(hprev, inp):
+        xc, dtc, bc, cc = inp                          # (b,L,h,p) …
+        da = dtc * Af[None, None, :]                   # (b,L,h)
+        a_cs = jnp.cumsum(da, axis=1)                  # inclusive
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)    # (b,L,L)
+        diff = jnp.where(tri, a_cs[:, :, None, :] - a_cs[:, None, :, :],
+                         0.0)
+        m = jnp.where(tri, jnp.exp(diff), 0.0)         # (b,L,L,h)
+        xdt = xc * dtc[..., None]                      # (b,L,h,p)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", scores, m, xdt)
+        # inter-chunk contribution from the carried state
+        y += jnp.exp(a_cs)[..., None] * jnp.einsum(
+            "bin,bhnp->bihp", cc, hprev)
+        # chunk state update: S_c = Σ_j exp(a_L − a_j) dt_j B_j ⊗ x_j
+        wj = jnp.exp(a_cs[:, -1:, :] - a_cs) * dtc     # (b,L,h)
+        s_c = jnp.einsum("bjn,bjh,bjhp->bhnp", bc, wj, xc)
+        hnew = hprev * jnp.exp(a_cs[:, -1, :])[..., None, None] + s_c
+        return hnew, y
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)                 # (c,b,L,h,p)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, impl: str = "auto",
+             interpret: bool = False):
+    """SSD forward over a full sequence. Returns y (B,S,H,P)."""
+    s = x.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        # causal recurrence: zero right-padding never affects live positions
+        pad = chunk - s % chunk
+        padded = ssd_scan(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))),
+            chunk=chunk, impl=impl, interpret=interpret)
+        return padded[:, :s]
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return _ssd_chunked_jnp(x, dt, A, Bm, Cm, chunk)
+    if impl == "ref":
+        return ssd_ref(x, dt, A, Bm, Cm)[0]
+    if impl != "pallas":
+        raise ValueError(impl)
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=interpret)
+
+
+@jax.jit
+def ssd_final_state(x, dt, A, Bm, Cm):
+    """Final SSM state h_S = Σ_j exp(a_S − a_j)·dt_j·(B_j ⊗ x_j).
+
+    Used by the prefill path to seed the O(1) decode recurrence after a
+    full-sequence SSD forward.  Shapes as :func:`ssd_scan`; returns
+    (B, H, N, P) float32.
+    """
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    da = dtf * A.astype(jnp.float32)[None, None, :]
+    a_cs = jnp.cumsum(da, axis=1)                      # (B,S,H) inclusive
+    w = jnp.exp(a_cs[:, -1:, :] - a_cs) * dtf          # (B,S,H)
+    return jnp.einsum("bsn,bsh,bshp->bhnp", Bf, w, xf)
+
+
+@jax.jit
+def ssd_decode_step(h, x_t, dt_t, A, B_t, C_t):
+    """O(1) recurrent decode step.
+
+    h (B,H,N,P) carried state; x_t (B,H,P); dt_t (B,H); B_t/C_t (B,N).
+    Returns (y_t (B,H,P), h_new).
+    """
+    hf = h.astype(jnp.float32)
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None])
+    upd = jnp.einsum("bn,bhp->bhnp", B_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32) * dt_t[..., None])
+    hnew = hf * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), hnew)
+    return y.astype(x_t.dtype), hnew.astype(h.dtype)

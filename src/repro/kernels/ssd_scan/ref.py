@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Sequential recurrence, per head:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)     h ∈ R^{N×P}
+    y_t = C_t · h_t                                        y ∈ R^{P}
+
+with x (B,S,H,P), dt (B,S,H), A (H,) negative decay rates, B/C (B,S,N)
+(single state group shared across heads, as in mamba2-130m).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, h0: jax.Array | None = None):
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp                       # (b,h,p),(b,h),(b,n),(b,n)
+        decay = jnp.exp(dtt * A[None, :])           # (b,h)
+        upd = jnp.einsum("bn,bhp->bhnp", bt, xt * dtt[..., None])
+        hnew = hprev * decay[..., None, None] + upd
+        yt = jnp.einsum("bn,bhnp->bhp", ct, hnew)
+        return hnew, yt
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    hfin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dtype), hfin

@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve CLIs.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — importing
+it sets XLA_FLAGS to fake 512 host devices (dry-run only, by design).
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,163 @@
+"""Compiled-artifact analysis: memory, FLOPs, and collective bytes.
+
+The dry-run proves a (arch × shape × mesh) cell compiles; this module
+extracts the roofline terms from the compiled executable:
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies per-device FLOPs/bytes (the SPMD module is
+per-partition); collective bytes are NOT in cost_analysis, so we parse the
+optimized HLO text and sum result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.  All three
+terms are reported as *global* quantities (per-device × chips) so the
+division by chips in the roofline formulas recovers per-device seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,128,5120]{2,1,0} all-gather(" or "(f32[8,4]{...}, ...) all-to-all("
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum result-shape bytes of every collective op (per-partition)."""
+    total = 0
+    by_kind: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result shape(s) appear before "= <op>(" — find the op first
+        m = re.search(r"=\s*\(?\s*(\w[\w-]*)\(", stripped)
+        kind = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in stripped or stripped.startswith(f"{c}("):
+                # confirm it's the op, not a comment
+                if re.search(rf"=\s*\(?[^=]*\b{c}\(", stripped) or \
+                        re.search(rf"\)\s*{c}\(", stripped):
+                    kind = c
+                    break
+        if kind is None:
+            continue
+        # sum every shape on the lhs of '='
+        lhs = stripped.split(f"{kind}(")[0]
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(lhs))
+        total += b
+        by_kind[kind] = by_kind.get(kind, 0) + b
+    return total, by_kind
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops_global: float
+    hbm_bytes_global: float
+    coll_bytes_global: float
+    coll_by_kind: Dict[str, int]
+    peak_bytes_per_chip: int
+    model_flops: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_global / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_global / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time: dominant term (perfect overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.flops_global:
+            return None
+        return self.model_flops / self.flops_global
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / (chips × peak × step_s) — MFU at the bound."""
+        if not self.model_flops or self.step_s <= 0:
+            return None
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.step_s)
+
+    def to_dict(self) -> Dict:
+        return {
+            "chips": self.chips,
+            "flops_global": self.flops_global,
+            "hbm_bytes_global": self.hbm_bytes_global,
+            "coll_bytes_global": self.coll_bytes_global,
+            "coll_by_kind": self.coll_by_kind,
+            "peak_bytes_per_chip": self.peak_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, chips: int, model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll, by_kind = collective_bytes(text)
+    mem = compiled.memory_analysis()
+    peak = int(getattr(mem, "temp_size_in_bytes", 0)
+               + getattr(mem, "argument_size_in_bytes", 0)
+               + getattr(mem, "output_size_in_bytes", 0)
+               - getattr(mem, "alias_size_in_bytes", 0))
+    return Roofline(
+        chips=chips,
+        flops_global=flops * chips,
+        hbm_bytes_global=hbm * chips,
+        coll_bytes_global=coll * chips,
+        coll_by_kind=by_kind,
+        peak_bytes_per_chip=peak,
+        model_flops=model_flops,
+    )

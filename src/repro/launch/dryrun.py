@@ -1,0 +1,249 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+THE first two lines below must run before any other import (jax locks the
+device count on first init); only the dry-run fakes 512 devices.
+
+For each cell this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. runs the TRA planner on the actual config/shape/mesh,
+  3. lowers the step function against ShapeDtypeStruct stand-ins with the
+     planner's in/out shardings (no allocation),
+  4. ``.compile()``s — sharding mismatches, unsupported collectives and
+     compile-time OOMs all surface here,
+  5. records memory_analysis / cost_analysis / parsed collective bytes to
+     ``experiments/dryrun/<cell>.json`` for EXPERIMENTS.md §Dry-run and
+     the roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs N]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import math
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (get_config, get_shape, input_specs, list_archs,
+                           SHAPES, supports_shape)
+from repro.launch.analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import (cache_spec, count_params, decode_step, init_params,
+                          param_shapes, prefill)
+from repro.optim import AdamWConfig
+from repro.runtime import make_train_step
+from repro.sharding import (batch_pspecs, cache_pspecs, logits_pspec,
+                            make_sharder, param_pspecs, plan_arch,
+                            zero1_pspecs)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens (train), 2·N_active·tokens (infer)."""
+    n = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch          # decode: one token each
+
+
+def _f32_like(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mesh_shape: Optional[tuple] = None) -> Dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = supports_shape(cfg, shape)
+    mesh_name = ("x".join(str(x) for x in mesh_shape) if mesh_shape
+                 else ("2x16x16" if multi_pod else "16x16"))
+    cell = f"{arch}×{shape_name}×{mesh_name}"
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": mesh_name,
+                 "kind": shape.kind}
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = reason
+        return rec
+
+    if mesh_shape is not None:
+        # §Perf mesh-refactor iterations: same 256 chips, different
+        # (data × model) factorization
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.shape.values())
+    plan = plan_arch(cfg, shape, mesh)
+    sharder = make_sharder(mesh, plan.act_axis_map)
+    rec["plan"] = plan.describe()
+
+    params_sds = param_shapes(cfg)
+    if shape.kind == "train":
+        pspecs = param_pspecs(mesh, plan.param_axis_map, params_sds)
+    else:
+        # serving: no optimizer state to pay for, so weights also shard
+        # over the data axes (FSDP-at-inference) and are gathered one
+        # scanned layer at a time
+        pspecs = zero1_pspecs(mesh, plan.param_axis_map, params_sds)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    batch_sds = input_specs(cfg, shape)
+    microbatched = False
+    if shape.kind == "train":
+        # gradient accumulation: one sequence per data shard per
+        # microbatch keeps live activations (with remat) ≈ one layer of
+        # one sequence — the standard memory shape at this batch size
+        dsize = plan.mesh.data_size
+        accum = max(1, shape.global_batch // max(dsize, 1))
+        if accum > 1:
+            microbatched = True
+            batch_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (accum, s.shape[0] // accum) + s.shape[1:], s.dtype),
+                batch_sds)
+            rec["accum_steps"] = accum
+    bspecs = batch_pspecs(mesh, plan.act_axis_map, batch_sds,
+                          microbatched=microbatched)
+    bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            from repro.optim import schedule as sched
+            step = make_train_step(cfg, AdamWConfig(),
+                                   lambda s: sched.constant(s), sharder)
+            zspecs = zero1_pspecs(mesh, plan.param_axis_map, params_sds)
+            zsh = jax.tree.map(lambda s: NamedSharding(mesh, s), zspecs)
+            opt_sds = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                       "master": _f32_like(params_sds),
+                       "m": _f32_like(params_sds),
+                       "v": _f32_like(params_sds)}
+            opt_sh = {"step": NamedSharding(mesh, P()),
+                      "master": zsh, "m": zsh, "v": zsh}
+            fn = jax.jit(step, in_shardings=(opt_sh, bsh),
+                         donate_argnums=(0,))
+            lowered = fn.lower(opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            def pf(params, batch):
+                return prefill(cfg, params, batch, shape.seq_len, sharder)
+
+            cache_sds = cache_spec(cfg, shape.global_batch, shape.seq_len)
+            cspecs = cache_pspecs(mesh, plan.act_axis_map, cfg, cache_sds)
+            csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+            lsh = NamedSharding(mesh, logits_pspec(mesh,
+                                                   plan.act_axis_map))
+            fn = jax.jit(pf, in_shardings=(psh, bsh),
+                         out_shardings=(lsh, csh))
+            lowered = fn.lower(params_sds, batch_sds)
+        else:  # decode
+            def dec(params, cache, batch):
+                return decode_step(cfg, params, cache, batch, sharder)
+
+            cache_sds = cache_spec(cfg, shape.global_batch, shape.seq_len)
+            cspecs = cache_pspecs(mesh, plan.act_axis_map, cfg, cache_sds)
+            csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+            lsh = NamedSharding(mesh, logits_pspec(mesh,
+                                                   plan.act_axis_map))
+            fn = jax.jit(dec, in_shardings=(psh, csh, bsh),
+                         out_shardings=(lsh, csh), donate_argnums=(1,))
+            lowered = fn.lower(params_sds, cache_sds, batch_sds)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_gib": getattr(mem, "argument_size_in_bytes", 0) / 2**30,
+        "output_gib": getattr(mem, "output_size_in_bytes", 0) / 2**30,
+        "temp_gib": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+        "alias_gib": getattr(mem, "alias_size_in_bytes", 0) / 2**30,
+    }
+    # raw XLA numbers (per-while-iteration — see metering.py docstring)
+    roof = analyze(compiled, chips, model_flops(cfg, shape))
+    rec["xla_raw"] = roof.to_dict()
+    # structural (loop-corrected) roofline — the table §Roofline uses this
+    from repro.launch.metering import meter, roofline_terms
+    mt = meter(cfg, shape, plan)
+    terms = roofline_terms(mt, chips)
+    mf = model_flops(cfg, shape)
+    terms["model_flops"] = mf
+    terms["useful_flops_ratio"] = mf / mt.flops if mt.flops else None
+    terms["roofline_fraction"] = (
+        mf / (chips * 197e12 * terms["step_s"])
+        if terms["step_s"] > 0 else None)
+    terms["flops_global"] = mt.flops
+    terms["hbm_bytes_global"] = mt.hbm_bytes
+    terms["coll_bytes_global"] = mt.coll_bytes
+    terms["detail"] = {k: round(v, 3) for k, v in sorted(
+        mt.detail.items(), key=lambda kv: -kv[1])}
+    rec["roofline"] = terms
+    rec["status"] = "ok"
+    rec["params"] = count_params(cfg)
+    rec["active_params"] = count_params(cfg, active_only=True)
+    frac = terms.get("roofline_fraction")
+    print(f"[dryrun] {cell}: OK "
+          f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s, "
+          f"dominant={terms['dominant']}, "
+          f"frac={frac if frac is None else round(frac, 4)})", flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s, args.multi_pod))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            rec = lower_cell(arch, shape, mp)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()}
+            failures += 1
+            print(f"[dryrun] {tag}: FAIL {e!r}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

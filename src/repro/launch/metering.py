@@ -1,0 +1,303 @@
+"""Structural roofline metering: exact-by-construction FLOPs / HBM bytes /
+collective bytes for a (config × shape × plan) cell.
+
+Why this exists: ``compiled.cost_analysis()`` does NOT multiply while-loop
+bodies by their trip counts (verified empirically: a 10-step scanned
+matmul reports 1.000000× the flops of a single matmul), and our models
+scan over layers / microbatches / attention blocks — so the XLA numbers
+undercount by the product of loop trip counts.  The dry-run records both:
+the raw XLA numbers (labeled per-iteration) and these structural numbers,
+which enumerate every matmul/attention/scan in the model analytically.
+The same formulas are the napkin-math engine for the §Perf hypothesis
+loop.
+
+Conventions: FLOPs count multiply+add (2·M·N·K per matmul).  Backward =
+2× forward matmul flops; the "full" remat policy recomputes the forward
+(+1×); "dots_saveable" recomputes only cheap elementwise ops (+~5%).
+HBM bytes: every weight is read once per microbatch per pass (fwd, bwd-
+dX, bwd-dW → 3×); activations are written+read once per layer boundary;
+optimizer reads+writes master/m/v.  Collective bytes follow the TRA
+plan: ring-collective wire volume  ≈ payload × (axis−1)/axis per hop
+direction (reduce-scatter and all-gather each move ≈ payload; all-reduce
+= RS + AG = 2× payload).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.sharding.planner import ArchPlan, PairDecision
+
+
+@dataclasses.dataclass
+class Meter:
+    flops: float = 0.0          # global FLOPs per step
+    hbm_bytes: float = 0.0      # global HBM traffic per step
+    coll_bytes: float = 0.0     # global wire bytes per step
+    detail: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, key: str, *, flops: float = 0.0, hbm: float = 0.0,
+            coll: float = 0.0) -> None:
+        self.flops += flops
+        self.hbm_bytes += hbm
+        self.coll_bytes += coll
+        if flops:
+            self.detail[f"flops/{key}"] = \
+                self.detail.get(f"flops/{key}", 0.0) + flops
+        if coll:
+            self.detail[f"coll/{key}"] = \
+                self.detail.get(f"coll/{key}", 0.0) + coll
+
+
+def _ring(payload_bytes: float, axis: int) -> float:
+    """Wire bytes of one reduce-scatter or all-gather over ``axis``."""
+    if axis <= 1:
+        return 0.0
+    return payload_bytes * (axis - 1)
+
+
+BP = 2  # bf16 weight/activation bytes
+
+
+def _layer_weight_bytes(cfg: ModelConfig) -> Dict[str, float]:
+    d = cfg.d_model
+    out = {}
+    if cfg.has_attention:
+        if cfg.use_mla:
+            w = d * cfg.q_dim + d * (cfg.kv_lora_rank + cfg.qk_rope_dim) \
+                + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim
+                                                    + cfg.v_head_dim) \
+                + cfg.n_heads * cfg.v_head_dim * d
+        else:
+            hd = cfg.head_dim
+            w = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2
+        out["attn"] = w * BP
+    if cfg.d_ff and cfg.family != "moe":
+        out["mlp"] = 3 * d * cfg.d_ff * BP
+    if cfg.n_experts:
+        out["moe"] = (3 * cfg.n_experts * d * cfg.d_ff_expert
+                      + 3 * cfg.n_shared_experts * d * cfg.d_ff_expert
+                      + d * cfg.n_experts) * BP
+    if cfg.ssm_state:
+        di = cfg.d_inner
+        out["ssm"] = (d * (2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                           + cfg.ssm_heads) + di * d) * BP
+    return out
+
+
+def _attn_flops(cfg: ModelConfig, t: int, kv_len: int, window: int,
+                causal_square: bool = True) -> float:
+    """Projections + scores + PV for t query tokens against kv_len keys."""
+    d = cfg.d_model
+    if cfg.use_mla:
+        qd, r = cfg.q_dim, cfg.kv_lora_rank
+        proj = 2 * t * d * qd + 2 * t * d * (r + cfg.qk_rope_dim) \
+            + 2 * t * r * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim) \
+            + 2 * t * cfg.n_heads * cfg.v_head_dim * d
+        per_head = cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim
+        attn = 2 * t * kv_len * cfg.n_heads * per_head
+    else:
+        hd = cfg.head_dim
+        proj = 2 * t * d * (cfg.n_heads * hd * 2
+                            + cfg.n_kv_heads * hd * 2)
+        attn = 2 * t * kv_len * cfg.n_heads * hd * 2
+    if window and window < kv_len:
+        attn *= window / kv_len
+    elif causal_square:
+        attn *= 0.5          # causal: half the square
+    return proj + attn
+
+
+def _mamba_flops(cfg: ModelConfig, t: int) -> float:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h, p = (cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads,
+                  cfg.ssm_head_dim)
+    proj = 2 * t * d * (2 * di + 2 * g * n + h) + 2 * t * di * d
+    conv = 2 * t * (di + 2 * g * n) * cfg.ssm_conv_width
+    L = min(cfg.ssm_chunk, t)
+    # intra-chunk: scores 2L²n + masked-mix 2L²hp ; states/inter: ≈4Lnhp
+    per_chunk = 2 * L * L * n + 2 * L * L * h * p + 4 * L * n * h * p
+    ssd = per_chunk * max(t // L, 1)
+    return proj + conv + ssd
+
+
+def _mlp_flops(d: int, ff: int, t: int) -> float:
+    return 3 * 2 * t * d * ff
+
+
+def _moe_flops(cfg: ModelConfig, t: int) -> float:
+    routed = t * cfg.top_k * cfg.moe_capacity_factor
+    f = _mlp_flops(cfg.d_model, cfg.d_ff_expert, int(routed))
+    f += 2 * t * cfg.d_model * cfg.n_experts          # router
+    if cfg.n_shared_experts:
+        f += _mlp_flops(cfg.d_model,
+                        cfg.d_ff_expert * cfg.n_shared_experts, t)
+    return f
+
+
+def _strategy(plan: ArchPlan, comp: str) -> str:
+    dec = plan.decisions.get(comp)
+    if isinstance(dec, PairDecision):
+        return dec.strategy
+    if isinstance(dec, str) and dec.startswith("ep"):
+        return "ep"
+    if isinstance(dec, str) and dec.startswith("tp"):
+        return "tp"
+    return "dp"
+
+
+def meter(cfg: ModelConfig, shape: ShapeSpec, plan: ArchPlan) -> Meter:
+    m = Meter()
+    sd, sm = plan.mesh.data_size, plan.mesh.model_size
+    train = shape.kind == "train"
+    decode = shape.kind == "decode"
+    S = shape.seq_len
+    t_tokens = shape.global_batch * (1 if decode else S)
+    kv_len = S
+    accum = max(1, shape.global_batch // max(sd, 1)) if train else 1
+    # pass multiplier: fwd=1; train adds bwd (2×) and remat recompute
+    if train:
+        pass_mult = {"none": 3.0, "dots_saveable": 3.15,
+                     "full": 4.0}[cfg.remat]
+    else:
+        pass_mult = 1.0
+
+    d, V = cfg.d_model, cfg.vocab_size
+    wbytes = _layer_weight_bytes(cfg)
+    n_attn_layers = 0
+    n_mamba_layers = 0
+    n_moe_layers = 0
+    n_mlp_layers = 0
+    if cfg.family in ("dense", "audio", "vlm"):
+        n_attn_layers = cfg.n_layers
+        n_mlp_layers = cfg.n_layers
+    elif cfg.family == "moe":
+        n_attn_layers = cfg.n_layers
+        n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+        n_mlp_layers = cfg.first_dense_layers
+    elif cfg.family == "ssm":
+        n_mamba_layers = cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_mamba_layers = cfg.n_layers
+        n_attn_layers = cfg.n_layers // cfg.mamba_per_group
+        n_mlp_layers = n_attn_layers
+
+    # ---------------- FLOPs ----------------
+    csq = not decode
+    if n_attn_layers:
+        if cfg.local_global_period:
+            loc = n_attn_layers // 2
+            glob = n_attn_layers - loc
+            f = loc * _attn_flops(cfg, t_tokens, kv_len, cfg.attn_window,
+                                  csq) \
+                + glob * _attn_flops(cfg, t_tokens, kv_len, 0, csq)
+        else:
+            f = n_attn_layers * _attn_flops(cfg, t_tokens, kv_len,
+                                            cfg.attn_window, csq)
+        m.add("attn", flops=f * pass_mult)
+    if n_mlp_layers:
+        ff = cfg.d_ff or 4 * d
+        m.add("mlp", flops=n_mlp_layers * _mlp_flops(d, ff, t_tokens)
+              * pass_mult)
+    if n_moe_layers:
+        m.add("moe", flops=n_moe_layers * _moe_flops(cfg, t_tokens)
+              * pass_mult)
+    if n_mamba_layers:
+        if decode:
+            di = cfg.d_inner
+            per_tok = (2 * d * (2 * di + 2 * cfg.ssm_ngroups
+                                * cfg.ssm_state + cfg.ssm_heads)
+                       + 2 * di * d
+                       + 4 * cfg.ssm_state * cfg.ssm_heads
+                       * cfg.ssm_head_dim)
+            f = n_mamba_layers * per_tok * shape.global_batch
+        else:
+            f = n_mamba_layers * _mamba_flops(cfg, S) * shape.global_batch
+        m.add("ssm", flops=f * pass_mult)
+    m.add("head", flops=2 * t_tokens * d * V * pass_mult)
+    if train:
+        from repro.models.model import count_params
+        m.add("optimizer", flops=12.0 * count_params(cfg))
+
+    # ---------------- HBM bytes ----------------
+    layer_w = 0.0
+    if n_attn_layers:
+        layer_w += n_attn_layers * wbytes.get("attn", 0)
+    if n_mlp_layers:
+        layer_w += n_mlp_layers * wbytes.get("mlp", 0)
+    if n_moe_layers:
+        layer_w += n_moe_layers * wbytes.get("moe", 0)
+    if n_mamba_layers:
+        layer_w += n_mamba_layers * wbytes.get("ssm", 0)
+    head_w = d * V * BP * (1 if cfg.tie_embeddings else 2)
+    total_w = layer_w + head_w
+    w_reads = (3 if train else 1) * accum
+    m.add("weights", hbm=total_w * w_reads)
+    n_layers_total = (n_attn_layers + n_mamba_layers + n_moe_layers
+                      + n_mlp_layers)
+    act_bytes = t_tokens * d * BP * n_layers_total * (4 if train else 2)
+    m.add("activations", hbm=act_bytes)
+    if decode:
+        # the KV cache / SSM state is read every step — decode's wall
+        cache_bp = 1 if "float8" in (cfg.kv_cache_dtype or "") else BP
+        cache = 0.0
+        if n_attn_layers and not cfg.use_mla:
+            cache = (n_attn_layers * 2 * cfg.n_kv_heads * cfg.head_dim
+                     * kv_len * shape.global_batch * cache_bp)
+        elif cfg.use_mla:
+            cache = (n_attn_layers * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                     * kv_len * shape.global_batch * cache_bp)
+        if n_mamba_layers:
+            cache += (n_mamba_layers * cfg.ssm_heads * cfg.ssm_state
+                      * cfg.ssm_head_dim * 4 * shape.global_batch)
+        m.add("kv-cache", hbm=cache)
+    if train:
+        from repro.models.model import count_params
+        m.add("optimizer", hbm=count_params(cfg) * 4 * 6)  # rd+wr m/v/w f32
+
+    # ---------------- collective bytes ----------------
+    if train and sd > 1:
+        # gradient sync over the data axes (RS) + ZeRO-1 param AG
+        m.add("grad-sync", coll=2 * _ring(total_w, sd))
+    comp_of = {"attn": ("attn", wbytes.get("attn", 0) * n_attn_layers),
+               "mlp": ("mlp", wbytes.get("mlp", 0) * n_mlp_layers),
+               "ssm": ("ssm", wbytes.get("ssm", 0) * n_mamba_layers),
+               "moe": ("moe", wbytes.get("moe", 0) * n_moe_layers)}
+    for comp, (key, wb) in comp_of.items():
+        if not wb:
+            continue
+        strat = _strategy(plan, comp)
+        nl = {"attn": n_attn_layers, "mlp": n_mlp_layers,
+              "ssm": n_mamba_layers, "moe": n_moe_layers}[key]
+        if strat == "fsdp" and sm > 1:
+            # weights gathered over the model axis per pass (fwd+bwd)
+            passes = (2 if train else 1) * accum
+            m.add(f"{key}-fsdp-gather", coll=_ring(wb, sm) * passes)
+        elif strat == "tp" and sm > 1:
+            # Megatron: RS+AG of the activations per layer per pass
+            passes = 2 if train else 1
+            payload = t_tokens * d * BP
+            m.add(f"{key}-tp-rs-ag",
+                  coll=2 * _ring(payload, sm) * nl * passes)
+        elif strat == "ep" and sm > 1:
+            routed = t_tokens * cfg.top_k * cfg.moe_capacity_factor
+            payload = routed * d * BP
+            passes = 2 if train else 1
+            m.add("moe-ep-a2a", coll=2 * payload * passes * nl)
+    if plan.act_axis_map.get("vocab") and sm > 1:
+        # vocab-sharded logits: logsumexp partial + dlogits path ≈ t×d
+        m.add("vocab", coll=_ring(t_tokens * d * BP,
+                                  sm) * (2 if train else 1))
+    return m
+
+
+def roofline_terms(meter_: Meter, chips: int) -> Dict[str, float]:
+    c = meter_.flops / (chips * PEAK_FLOPS)
+    h = meter_.hbm_bytes / (chips * HBM_BW)
+    k = meter_.coll_bytes / (chips * ICI_BW)
+    dom = max((c, "compute"), (h, "memory"), (k, "collective"))[1]
+    return {"compute_s": c, "memory_s": h, "collective_s": k,
+            "dominant": dom, "step_s": max(c, h, k)}

@@ -1,0 +1,99 @@
+"""Serving launcher: batched prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+
+Runs prefill over a batch of prompts, then step-decodes with greedy
+sampling against the fixed-capacity cache.  With ``--mesh`` the cache and
+weights are sharded per the TRA plan (decode forces KV sharding — see
+planner).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args(argv)
+
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={d * m} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import decode_step, init_params, prefill
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    cache_len = args.prompt_len + args.gen
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+
+    sharder = None
+    if args.mesh:
+        from repro.configs.base import ShapeSpec
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding import make_sharder, plan_arch
+        mesh = make_host_mesh(d, m)
+        shape = ShapeSpec("serve", cache_len, args.batch, "decode")
+        plan = plan_arch(cfg, shape, mesh)
+        sharder = make_sharder(mesh, plan.act_axis_map)
+    else:
+        from repro.models.layers import no_shard
+        sharder = no_shard
+
+    B, S = args.batch, args.prompt_len
+    if cfg.input_mode == "tokens":
+        prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": prompts}
+    else:
+        batch = {"embeds": jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.bfloat16)}
+
+    t0 = time.perf_counter()
+    pf = jax.jit(lambda p, b: prefill(cfg, p, b, cache_len, sharder))
+    logits, cache = pf(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    step = jax.jit(lambda p, c, b: decode_step(cfg, p, c, b, sharder),
+                   donate_argnums=(1,))
+    out_tokens = []
+    tok = logits.argmax(-1).astype(jnp.int32)
+    t1 = time.perf_counter()
+    for _ in range(args.gen):
+        if cfg.input_mode == "tokens":
+            step_in = {"token": tok}
+        else:
+            emb = jax.random.normal(key, (B, 1, cfg.d_model), jnp.bfloat16)
+            step_in = {"embed": emb}
+        logits, cache = step(params, cache, step_in)
+        tok = logits.argmax(-1).astype(jnp.int32)
+        out_tokens.append(jax.device_get(tok)[:, 0])
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t1
+
+    toks_s = B * args.gen / t_decode
+    print(f"[serve] {args.arch}: prefill({B}x{S}) {t_prefill * 1e3:.1f} ms, "
+          f"decode {args.gen} steps @ {toks_s:.1f} tok/s")
+    print(f"[serve] sample continuation (seq 0): "
+          f"{[int(t[0]) for t in out_tokens]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""Composable model definitions for all assigned architectures."""
+from repro.models.model import (cache_spec, count_params, decode_step,
+                                forward, init_cache, init_params, loss_fn,
+                                param_shapes, prefill)
+
+__all__ = ["cache_spec", "count_params", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn", "param_shapes",
+           "prefill"]

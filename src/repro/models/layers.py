@@ -1,0 +1,592 @@
+"""Model layers: norms, RoPE, GQA/MLA attention, SwiGLU, MoE, Mamba2.
+
+Conventions
+-----------
+* Params are nested dicts of jax.Arrays; init functions take a PRNG key and
+  return the dict.  Weight dtype is ``cfg.dtype`` except norm scales and SSM
+  decay parameters, which stay float32.
+* Every layer takes a ``shard`` callable ``(x, *axes) -> x`` that applies a
+  ``with_sharding_constraint`` when running under a mesh and is a no-op
+  otherwise.  The *axes* follow the TRA planner's decisions (see
+  ``repro/sharding/planner.py``) — this is how the paper's cost-model-chosen
+  placements reach XLA.
+* Attention layers expose both the full-sequence path (training/prefill,
+  flash-attention kernel on TPU) and an O(1)-per-token decode path against a
+  fixed-capacity KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.ssd_scan.ops import ssd_decode_step, ssd_scan
+
+Params = Dict[str, object]
+Shard = Callable[..., jax.Array]
+
+
+def no_shard(x: jax.Array, *axes) -> jax.Array:
+    return x
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * std).astype(dtype)
+
+
+# ==========================================================================
+# RMSNorm
+# ==========================================================================
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ==========================================================================
+# RoPE
+# ==========================================================================
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x (..., S, D) with positions (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    # broadcast ang across any head dims between batch and S
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :, :] if ang.ndim >= 2 else ang
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ==========================================================================
+# GQA attention
+# ==========================================================================
+
+def gqa_init(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, KV * hd, dt),
+        "wv": dense_init(ks[2], d, KV * hd, dt),
+        "wo": dense_init(ks[3], H * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    return p
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: jax.Array, shard: Shard):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard(q.reshape(B, S, H, hd), "data", None, "attn", None)
+    k = shard(k.reshape(B, S, KV, hd), "data", None, "kv", None)
+    v = shard(v.reshape(B, S, KV, hd), "data", None, "kv", None)
+    return q, k, v
+
+
+def gqa_attention(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                  window: int = 0, shard: Shard = no_shard,
+                  positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, shard)
+    pos = positions if positions is not None else jnp.arange(S)
+    q = apply_rope(q.swapaxes(1, 2), pos, cfg.rope_theta)    # (B,H,S,hd)
+    k = apply_rope(k.swapaxes(1, 2), pos, cfg.rope_theta)    # (B,KV,S,hd)
+    v = v.swapaxes(1, 2)
+    o = attention(q, k, v, causal=True, window=window,
+                  softcap=cfg.attn_softcap)
+    o = o.swapaxes(1, 2).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return shard(o @ p["wo"], "data", None, None)
+
+
+def gqa_prefill(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                window: int = 0, cache_len: int, shard: Shard = no_shard
+                ) -> Tuple[jax.Array, Params]:
+    """Prefill: returns output and a right-padded KV cache."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, shard)
+    pos = jnp.arange(S)
+    qr = apply_rope(q.swapaxes(1, 2), pos, cfg.rope_theta)
+    kr = apply_rope(k.swapaxes(1, 2), pos, cfg.rope_theta)
+    vr = v.swapaxes(1, 2)
+    o = attention(qr, kr, vr, causal=True, window=window,
+                  softcap=cfg.attn_softcap)
+    o = o.swapaxes(1, 2).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    pad = cache_len - S
+    cdt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    cache = {
+        "k": shard(jnp.pad(kr.swapaxes(1, 2),
+                           ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cdt),
+                   "data", "seq", "kv", None),
+        "v": shard(jnp.pad(vr.swapaxes(1, 2),
+                           ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cdt),
+                   "data", "seq", "kv", None),
+    }
+    return shard(o @ p["wo"], "data", None, None), cache
+
+
+def gqa_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+               pos: jax.Array, *, window: int = 0,
+               shard: Shard = no_shard) -> Tuple[jax.Array, Params]:
+    """One-token decode against a fixed-capacity cache.
+
+    ``x`` (B, 1, d); ``cache["k"/"v"]`` (B, Smax, KV, hd); ``pos`` scalar —
+    the index this token writes at (number of tokens already cached).
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(p, cfg, x, shard)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q.swapaxes(1, 2), posv, cfg.rope_theta)   # (B,H,1,hd)
+    k = apply_rope(k.swapaxes(1, 2), posv, cfg.rope_theta)   # (B,KV,1,hd)
+    # one-hot masked write (not dynamic_update_slice): elementwise select
+    # keeps a sequence-sharded cache sharded under GSPMD — no gather
+    smax = cache["k"].shape[1]
+    hot = (jnp.arange(smax) == pos)[None, :, None, None]
+    knew = jnp.where(hot, k.swapaxes(1, 2).astype(cache["k"].dtype),
+                     cache["k"])
+    vnew = jnp.where(hot, v.astype(cache["v"].dtype), cache["v"])
+    group = H // KV
+    kk = knew.swapaxes(1, 2).astype(jnp.float32)             # (B,KV,Smax,hd)
+    vv = vnew.swapaxes(1, 2).astype(jnp.float32)
+    qf = q.reshape(B, KV, group, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qf, kk) * (hd ** -0.5)
+    if cfg.attn_softcap > 0.0:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    cols = jnp.arange(smax)
+    valid = cols <= pos
+    if window > 0:
+        valid &= cols > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", pr, vv).reshape(B, 1, H * hd)
+    o = o.astype(x.dtype)
+    return shard(o @ p["wo"], "data", None, None), \
+        {"k": knew, "v": vnew}
+
+
+# ==========================================================================
+# MLA attention (deepseek-v2)
+# ==========================================================================
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d, H = cfg.d_model, cfg.n_heads
+    r, nope, rope, vh = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                         cfg.v_head_dim)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d, H * (nope + rope), dt),
+        "wdkv": dense_init(ks[1], d, r + rope, dt),     # down-proj + k_rope
+        "wuk": dense_init(ks[2], r, H * nope, dt),      # up-proj for K
+        "wuv": dense_init(ks[3], r, H * vh, dt),        # up-proj for V
+        "wo": dense_init(ks[4], H * vh, d, dt),
+        "norm_kv": rmsnorm_init(r),
+    }
+
+
+def _mla_qc(p: Params, cfg: ModelConfig, x: jax.Array, positions,
+            shard: Shard):
+    """Shared query/compressed-KV computation for prefill and decode."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    q = (x @ p["wq"]).reshape(B, S, H, nope + rope)
+    q = shard(q, "data", None, "attn", None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions,
+                        cfg.rope_theta).swapaxes(1, 2)
+    dkv = x @ p["wdkv"]                                  # (B,S,r+rope)
+    c_kv = rmsnorm(p["norm_kv"], dkv[..., :r], cfg.rms_eps)
+    k_rope = apply_rope(dkv[..., None, r:].swapaxes(1, 2), positions,
+                        cfg.rope_theta).swapaxes(1, 2)   # (B,S,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                  shard: Shard = no_shard) -> jax.Array:
+    """Training/prefill MLA: decompress K/V and run flash attention."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, vh, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                         cfg.kv_lora_rank)
+    pos = jnp.arange(S)
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, cfg, x, pos, shard)
+    k_nope = (c_kv @ p["wuk"]).reshape(B, S, H, nope)
+    v = (c_kv @ p["wuv"]).reshape(B, S, H, vh)
+    v = shard(v, "data", None, "attn", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1)
+    scale = (nope + rope) ** -0.5
+    o = attention(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                  causal=True, scale=scale)
+    o = o.swapaxes(1, 2).reshape(B, S, H * vh)
+    return shard(o @ p["wo"], "data", None, None)
+
+
+def mla_prefill(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                cache_len: int, shard: Shard = no_shard
+                ) -> Tuple[jax.Array, Params]:
+    B, S, _ = x.shape
+    out = mla_attention(p, cfg, x, shard=shard)
+    pos = jnp.arange(S)
+    _, _, c_kv, k_rope = _mla_qc(p, cfg, x, pos, shard)
+    pad = cache_len - S
+    cdt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    cache = {
+        "c_kv": shard(jnp.pad(c_kv, ((0, 0), (0, pad),
+                                     (0, 0))).astype(cdt),
+                      "data", "seq", None),
+        "k_rope": shard(jnp.pad(k_rope[:, :, 0, :],
+                                ((0, 0), (0, pad), (0, 0))).astype(cdt),
+                        "data", "seq", None),
+    }
+    return out, cache
+
+
+def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+               pos: jax.Array, *, shard: Shard = no_shard
+               ) -> Tuple[jax.Array, Params]:
+    """Absorbed MLA decode: attention runs in the compressed space.
+
+    The W_uk projection is absorbed into the query and W_uv into the
+    output, so per-step work is O(r) per cached token rather than
+    O(H·(nope+vh)) — the memory-bound decode reads only the (r + rope)
+    compressed cache.  This is MLA's raison d'être and our decode shapes
+    exercise it directly.
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rope, vh, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                         cfg.kv_lora_rank)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope, c_new, k_rope_new = _mla_qc(p, cfg, x, posv, shard)
+    smax = cache["c_kv"].shape[1]
+    hot = (jnp.arange(smax) == pos)[None, :, None]
+    c_kv = jnp.where(hot, c_new.astype(cache["c_kv"].dtype),
+                     cache["c_kv"])
+    k_rope = jnp.where(hot, k_rope_new[:, :, 0, :].astype(
+        cache["k_rope"].dtype), cache["k_rope"])
+    # absorb W_uk into q:  (B,1,H,nope) @ (r,H,nope) -> (B,1,H,r)
+    wuk = p["wuk"].reshape(r, H, nope)
+    q_abs = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s = (jnp.einsum("bthr,bsr->bhts", q_abs, c_kv.astype(jnp.float32))
+         + jnp.einsum("bthe,bse->bhts", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32)))
+    s = s * ((nope + rope) ** -0.5)
+    valid = jnp.arange(smax) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhts,bsr->bthr", pr, c_kv.astype(jnp.float32))
+    wuv = p["wuv"].reshape(r, H, vh)
+    o = jnp.einsum("bthr,rhv->bthv", o_c, wuv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * vh).astype(x.dtype)
+    return shard(o @ p["wo"], "data", None, None), \
+        {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ==========================================================================
+# SwiGLU MLP
+# ==========================================================================
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], d, d_ff, dtype),       # up
+        "wg": dense_init(ks[1], d, d_ff, dtype),       # gate
+        "wo": dense_init(ks[2], d_ff, d, dtype),       # down
+    }
+
+
+def mlp(p: Params, x: jax.Array, shard: Shard = no_shard) -> jax.Array:
+    h = shard(jax.nn.silu(x @ p["wg"]) * (x @ p["wi"]),
+              "data", None, "ffn")
+    return shard(h @ p["wo"], "data", None, None)
+
+
+# ==========================================================================
+# Mixture of Experts
+# ==========================================================================
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "wi": (jax.random.normal(ks[1], (E, d, ff), jnp.float32)
+               * std).astype(dt),
+        "wg": (jax.random.normal(ks[2], (E, d, ff), jnp.float32)
+               * std).astype(dt),
+        "wo": (jax.random.normal(ks[3], (E, ff, d), jnp.float32)
+               / math.sqrt(ff)).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d,
+                               cfg.d_ff_expert * cfg.n_shared_experts, dt)
+    return p
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def moe(p: Params, cfg: ModelConfig, x: jax.Array,
+        shard: Shard = no_shard) -> jax.Array:
+    """Grouped local dispatch → batched expert SwiGLU → weighted combine.
+
+    Tokens are dispatched *within per-data-shard groups* (the standard
+    TPU SPMD MoE layout): each group sorts only its own tokens into an
+    (E, C_g, d) buffer, so every dispatch op is elementwise in the group
+    dim and shards trivially under GSPMD — the only cross-device traffic
+    is the intended expert all-to-all when experts are ``PART_expert``
+    over the model axis (the TRA ``SHUF`` on the expert key dim).
+    Capacity is ``top_k·T_g/E × capacity_factor`` per group; overflow
+    tokens fall back to the shared-expert / residual path.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = getattr(shard, "data_size", 1)
+    if G <= 1 or T % G:
+        G = 1
+    Tg = T // G
+    xt = shard(x.reshape(G, Tg, d), "data", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"])                          # (G, Tg, E)
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), K)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    fe = idx.reshape(G, Tg * K)                               # expert ids
+    ft = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K))     # token rows
+    fg = gates.reshape(G, Tg * K)
+
+    cap = _round_up(max(int(Tg * K / E * cfg.moe_capacity_factor), 1), 8)
+    order = jnp.argsort(fe, axis=1)
+    se = jnp.take_along_axis(fe, order, axis=1)
+    st = jnp.take_along_axis(ft, order, axis=1)
+    sg = jnp.take_along_axis(fg, order, axis=1)
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    pos_in_e = jnp.arange(Tg * K)[None] - first
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, E * cap)      # overflow
+
+    xg = jnp.take_along_axis(xt, st[..., None], axis=1)       # (G,TgK,d)
+
+    def scatter(buf, sl, rows):
+        return buf.at[sl].set(rows, mode="drop")
+
+    buf = jnp.zeros((G, E * cap + 1, d), x.dtype)
+    buf = jax.vmap(scatter)(buf, slot, xg)[:, :-1]
+    buf = shard(buf.reshape(G, E, cap, d), "data", "expert", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["wi"])
+    h = shard(jax.nn.silu(h) * u, "data", "expert", None, "ffn")
+    eo = jnp.einsum("gecf,efd->gecd", h, p["wo"])             # (G,E,cap,d)
+    eo = shard(eo, "data", "expert", None, None)
+    eo = eo.reshape(G, E * cap, d)
+
+    back = jnp.take_along_axis(
+        eo, jnp.where(keep, se * cap + pos_in_e, 0)[..., None], axis=1)
+    contrib = back * (sg * keep)[..., None].astype(x.dtype)
+
+    def combine(o, rows, c):
+        return o.at[rows].add(c)
+
+    out = jax.vmap(combine)(jnp.zeros((G, Tg, d), x.dtype), st, contrib)
+    out = shard(out, "data", None, None)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], xt.reshape(G * Tg, d), shard=no_shard
+                        ).reshape(G, Tg, d)
+    return shard(out.reshape(B, S, d), "data", None, None)
+
+
+def moe_aux_loss(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Load-balancing auxiliary loss (switch-style)."""
+    T = x.shape[0] * x.shape[1]
+    logits = (x.reshape(T, -1).astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)
+
+
+# ==========================================================================
+# Mamba2 block
+# ==========================================================================
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    """Projections are stored *split* (z / x / BC / dt) rather than as one
+    fused in-projection: each part then has a clean tensor-parallel axis
+    (z, x, dt shard over SSD heads; the small B/C projections replicate),
+    which the TRA planner can assign independently."""
+    dt = _dtype(cfg)
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], d, di, dt),
+        "w_x": dense_init(ks[1], d, di, dt),
+        "w_bc": dense_init(ks[2], d, 2 * g * n, dt),
+        "w_dt": dense_init(ks[3], d, h, dt),
+        "conv_wx": (jax.random.normal(ks[4], (cfg.ssm_conv_width, di),
+                                      jnp.float32)
+                    / math.sqrt(cfg.ssm_conv_width)).astype(dt),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_wbc": (jax.random.normal(ks[5], (cfg.ssm_conv_width, 2 * g * n),
+                                       jnp.float32)
+                     / math.sqrt(cfg.ssm_conv_width)).astype(dt),
+        "conv_bbc": jnp.zeros((2 * g * n,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "w_out": dense_init(ks[6], di, d, dt),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with taps (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(W):
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _mamba_proj(p: Params, cfg: ModelConfig, x: jax.Array, shard: Shard):
+    z = shard(x @ p["w_z"], "data", None, "ssm")
+    xr = shard(x @ p["w_x"], "data", None, "ssm")
+    bc = x @ p["w_bc"]
+    dtr = x @ p["w_dt"]
+    return z, xr, bc, dtr
+
+
+def mamba2_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                   shard: Shard = no_shard) -> jax.Array:
+    B, S, _ = x.shape
+    di, g, n, h, hp = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_head_dim)
+    z, xr, bc, dtr = _mamba_proj(p, cfg, x, shard)
+    xc = jax.nn.silu(_causal_conv(xr, p["conv_wx"], p["conv_bx"]))
+    bcc = jax.nn.silu(_causal_conv(bc, p["conv_wbc"], p["conv_bbc"]))
+    xs = xc.reshape(B, S, h, hp)
+    Bm, Cm = bcc[..., :g * n], bcc[..., g * n:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y = ssd_scan(xs, dt, A, Bm, Cm, chunk=min(cfg.ssm_chunk, S))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.rms_eps)
+    return shard(y @ p["w_out"], "data", None, None)
+
+
+def mamba2_prefill(p: Params, cfg: ModelConfig, x: jax.Array,
+                   shard: Shard = no_shard) -> Tuple[jax.Array, Params]:
+    """Full-sequence forward that also returns the decode cache."""
+    from repro.kernels.ssd_scan.ops import ssd_final_state
+    B, S, _ = x.shape
+    di, g, n, h, hp = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_head_dim)
+    z, xr, bc, dtr = _mamba_proj(p, cfg, x, shard)
+    xc = jax.nn.silu(_causal_conv(xr, p["conv_wx"], p["conv_bx"]))
+    bcc = jax.nn.silu(_causal_conv(bc, p["conv_wbc"], p["conv_bbc"]))
+    xs = xc.reshape(B, S, h, hp)
+    Bm, Cm = bcc[..., :g * n], bcc[..., g * n:]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y = ssd_scan(xs, dt, A, Bm, Cm, chunk=min(cfg.ssm_chunk, S))
+    hfin = ssd_final_state(xs, dt, A, Bm, Cm)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.rms_eps)
+    W = cfg.ssm_conv_width
+    cache = {"conv_x": shard(xr[:, S - (W - 1):, :], "data", None, "ssm"),
+             "conv_bc": bc[:, S - (W - 1):, :],
+             "ssm": shard(hfin, "data", "ssm", None, None)}
+    return shard(y @ p["w_out"], "data", None, None), cache
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner),
+                            dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                              2 * cfg.ssm_ngroups * cfg.ssm_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Params,
+                  shard: Shard = no_shard) -> Tuple[jax.Array, Params]:
+    """O(1) decode step: x (B, 1, d)."""
+    B = x.shape[0]
+    di, g, n, h, hp = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_head_dim)
+    z, xr, bc, dtr = _mamba_proj(p, cfg, x, shard)
+    hist_x = jnp.concatenate([cache["conv_x"], xr], axis=1)   # (B, W, di)
+    hist_bc = jnp.concatenate([cache["conv_bc"], bc], axis=1)
+    conv_x = jnp.einsum("bwc,wc->bc", hist_x.astype(jnp.float32),
+                        p["conv_wx"].astype(jnp.float32)) \
+        + p["conv_bx"].astype(jnp.float32)
+    conv_bc = jnp.einsum("bwc,wc->bc", hist_bc.astype(jnp.float32),
+                         p["conv_wbc"].astype(jnp.float32)) \
+        + p["conv_bbc"].astype(jnp.float32)
+    xt = jax.nn.silu(conv_x).astype(x.dtype).reshape(B, h, hp)
+    bcc = jax.nn.silu(conv_bc).astype(x.dtype)
+    Bt, Ct = bcc[:, :g * n], bcc[:, g * n:]
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, hnew = ssd_decode_step(cache["ssm"], xt, dt, A, Bt, Ct)
+    y = y + xt * p["d_skip"][None, :, None].astype(xt.dtype)
+    y = y.reshape(B, 1, di) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.rms_eps)
+    new_cache = {"conv_x": hist_x[:, 1:, :], "conv_bc": hist_bc[:, 1:, :],
+                 "ssm": hnew}
+    return shard(y @ p["w_out"], "data", None, None), new_cache

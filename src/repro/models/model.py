@@ -1,0 +1,451 @@
+"""Unified decoder LM covering all assigned architecture families.
+
+One model definition, configured by :class:`repro.configs.base.ModelConfig`:
+
+* **dense / audio / vlm** — scan over attention+SwiGLU blocks.  gemma2's
+  local/global alternation is handled by scanning over *groups* of
+  ``local_global_period`` layers so window sizes stay static.
+* **moe** — optional leading dense blocks (deepseek layer 0), then a scan
+  over MoE blocks.
+* **ssm** — scan over Mamba2 blocks.
+* **hybrid** (zamba2) — scan over groups of ``mamba_per_group`` Mamba2
+  layers, each group followed by one application of a *shared* attention
+  block (alternating among ``n_shared_blocks`` weight sets).
+
+Three entry points per architecture, all pure functions of (params, inputs):
+
+* :func:`forward`      — training / scoring (full sequence → logits)
+* :func:`prefill`      — full sequence → (last-position logits, KV cache)
+* :func:`decode_step`  — one token + cache → (logits, cache)
+
+Layers are scanned (``jax.lax.scan``) so the lowered HLO is O(1) in depth —
+essential for the 512-device multi-pod dry-run — with a configurable remat
+policy applied to the scan body.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import Params, Shard, no_shard
+
+# ==========================================================================
+# Block = (attention | mamba) + (mlp | moe), pre-norm residual
+# ==========================================================================
+
+
+def _attn_block_init(key, cfg: ModelConfig, *, use_moe: bool,
+                     d_ff: Optional[int] = None) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"ln1": L.rmsnorm_init(cfg.d_model),
+                 "ln2": L.rmsnorm_init(cfg.d_model)}
+    p["attn"] = L.mla_init(k1, cfg) if cfg.use_mla else L.gqa_init(k1, cfg)
+    if use_moe:
+        p["moe"] = L.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, d_ff or cfg.d_ff,
+                              jnp.dtype(cfg.dtype))
+    if cfg.post_block_norm:
+        p["post_ln1"] = L.rmsnorm_init(cfg.d_model)
+        p["post_ln2"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _attn_block(p: Params, cfg: ModelConfig, x, *, window: int,
+                shard: Shard, mode: str, cache=None, pos=None):
+    """mode ∈ {train, prefill, decode}; returns (x, new_cache_or_None)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    new_cache = None
+    if cfg.use_mla:
+        if mode == "train":
+            a = L.mla_attention(p["attn"], cfg, h, shard=shard)
+        elif mode == "prefill":
+            a, new_cache = L.mla_prefill(p["attn"], cfg, h,
+                                         cache_len=cache, shard=shard)
+        else:
+            a, new_cache = L.mla_decode(p["attn"], cfg, h, cache, pos,
+                                        shard=shard)
+    else:
+        if mode == "train":
+            a = L.gqa_attention(p["attn"], cfg, h, window=window,
+                                shard=shard)
+        elif mode == "prefill":
+            a, new_cache = L.gqa_prefill(p["attn"], cfg, h, window=window,
+                                         cache_len=cache, shard=shard)
+        else:
+            a, new_cache = L.gqa_decode(p["attn"], cfg, h, cache, pos,
+                                        window=window, shard=shard)
+    if cfg.post_block_norm:
+        a = L.rmsnorm(p["post_ln1"], a, cfg.rms_eps)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
+    m = L.moe(p["moe"], cfg, h, shard) if "moe" in p \
+        else L.mlp(p["mlp"], h, shard)
+    if cfg.post_block_norm:
+        m = L.rmsnorm(p["post_ln2"], m, cfg.rms_eps)
+    return x + m, new_cache
+
+
+def _mamba_block_init(key, cfg: ModelConfig) -> Params:
+    return {"ln": L.rmsnorm_init(cfg.d_model),
+            "mix": L.mamba2_init(key, cfg)}
+
+
+def _mamba_block(p: Params, cfg: ModelConfig, x, *, shard: Shard,
+                 mode: str, cache=None):
+    h = L.rmsnorm(p["ln"], x, cfg.rms_eps)
+    if mode == "train":
+        return x + L.mamba2_forward(p["mix"], cfg, h, shard), None
+    if mode == "prefill":
+        y, c = L.mamba2_prefill(p["mix"], cfg, h, shard)
+        return x + y, c
+    y, c = L.mamba2_decode(p["mix"], cfg, h, cache, shard)
+    return x + y, c
+
+
+# ==========================================================================
+# Group structure (what one scan step covers)
+# ==========================================================================
+
+def group_size(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.mamba_per_group
+    if cfg.local_global_period:
+        return cfg.local_global_period
+    return 1
+
+
+def n_scan_groups(cfg: ModelConfig) -> int:
+    n = cfg.n_layers - cfg.first_dense_layers
+    g = group_size(cfg)
+    if n % g:
+        raise ValueError(f"{cfg.name}: {n} layers not divisible by "
+                         f"group size {g}")
+    return n // g
+
+
+def _window_for(cfg: ModelConfig, idx_in_group: int) -> int:
+    """Static sliding-window size for sub-layer ``idx_in_group``."""
+    if cfg.local_global_period and idx_in_group % 2 == 0:
+        return cfg.attn_window
+    return cfg.attn_window if not cfg.local_global_period else 0
+
+
+def _group_init(key, cfg: ModelConfig) -> Params:
+    """Init one scan group (stacked over the in-group sub-layers)."""
+    g = group_size(cfg)
+    keys = jax.random.split(key, g)
+    if cfg.family in ("dense", "audio", "vlm"):
+        blocks = [_attn_block_init(k, cfg, use_moe=False) for k in keys]
+    elif cfg.family == "moe":
+        blocks = [_attn_block_init(k, cfg, use_moe=cfg.n_experts > 0)
+                  for k in keys]
+    elif cfg.family in ("ssm", "hybrid"):
+        blocks = [_mamba_block_init(k, cfg) for k in keys]
+    else:
+        raise ValueError(cfg.family)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+# ==========================================================================
+# init / count
+# ==========================================================================
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {}
+    if cfg.input_mode == "tokens":
+        p["embed"] = {"w": (jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * (cfg.d_model ** -0.5)).astype(dt)}
+    # leading dense blocks (deepseek layer 0)
+    if cfg.first_dense_layers:
+        dks = jax.random.split(keys[1], cfg.first_dense_layers)
+        p["dense0"] = [_attn_block_init(k, cfg, use_moe=False) for k in dks]
+    # scanned groups
+    G = n_scan_groups(cfg)
+    gks = jax.random.split(keys[2], G)
+    groups = [_group_init(k, cfg) for k in gks]
+    p["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    # hybrid shared attention blocks
+    if cfg.family == "hybrid":
+        sks = jax.random.split(keys[3], cfg.n_shared_blocks)
+        shared = [_attn_block_init(k, cfg, use_moe=False) for k in sks]
+        p["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs), *shared)
+    p["final_norm"] = L.rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings and cfg.input_mode == "tokens":
+        p["lm_head"] = {"w": L.dense_init(keys[4], cfg.d_model,
+                                          cfg.vocab_size, dt)}
+    elif cfg.input_mode == "embeddings":
+        p["lm_head"] = {"w": L.dense_init(keys[4], cfg.d_model,
+                                          cfg.vocab_size, dt)}
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct tree of the params — no allocation (dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = param_shapes(cfg)
+    total = 0
+    routed = 0
+
+    def visit(path, leaf):
+        nonlocal total, routed
+        n = math.prod(leaf.shape)
+        total += n
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if "moe" in keys and any(k in ("wi", "wg", "wo") for k in keys):
+            routed += n
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    if active_only and cfg.n_experts:
+        total -= routed
+        total += routed * cfg.top_k // cfg.n_experts
+    return total
+
+
+# ==========================================================================
+# forward / loss
+# ==========================================================================
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat)
+
+
+def embed_in(cfg: ModelConfig, params: Params, batch: Dict,
+             shard: Shard) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        tok = batch.get("tokens", batch.get("token"))
+        x = params["embed"]["w"][tok]
+    else:
+        x = batch.get("embeds", batch.get("embed"))
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x.astype(jnp.dtype(cfg.dtype)), "data", None, None)
+
+
+def unembed(cfg: ModelConfig, params: Params, x: jax.Array,
+            shard: Shard) -> jax.Array:
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        w = params["embed"]["w"].T
+    else:
+        w = params["lm_head"]["w"]
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if cfg.logit_softcap > 0.0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard(logits, "data", None, "vocab")
+
+
+def _select_shared(params: Params, gi, n_shared: int) -> Params:
+    return jax.tree.map(lambda l: l[gi % n_shared], params["shared"])
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict,
+            shard: Shard = no_shard) -> jax.Array:
+    """Full-sequence forward → logits (B, S, vocab) in f32."""
+    x = embed_in(cfg, params, batch, shard)
+    gsz = group_size(cfg)
+
+    for blk in params.get("dense0", []):
+        x, _ = _attn_block(blk, cfg, x, window=0, shard=shard, mode="train")
+
+    def body(x, xs):
+        gp, gi = xs
+        for i in range(gsz):
+            sub = jax.tree.map(lambda l, i=i: l[i], gp)
+            if cfg.family in ("ssm", "hybrid"):
+                x, _ = _mamba_block(sub, cfg, x, shard=shard, mode="train")
+            else:
+                x, _ = _attn_block(sub, cfg, x, window=_window_for(cfg, i),
+                                   shard=shard, mode="train")
+        if cfg.family == "hybrid":
+            sp = _select_shared(params, gi, cfg.n_shared_blocks)
+            x, _ = _attn_block(sp, cfg, x, window=0, shard=shard,
+                               mode="train")
+        return x, None
+
+    G = n_scan_groups(cfg)
+    x, _ = jax.lax.scan(_remat(cfg, body), x,
+                        (params["blocks"], jnp.arange(G)))
+    return unembed(cfg, params, x, shard)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict,
+            shard: Shard = no_shard) -> Tuple[jax.Array, Dict]:
+    logits = forward(cfg, params, batch, shard)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    # z-loss keeps the softmax normalizer bounded (bf16 stability)
+    zloss = 1e-4 * jnp.square(logz).mean()
+    metrics = {"nll": nll, "zloss": zloss,
+               "accuracy": (logits.argmax(-1) == labels).mean()}
+    return nll + zloss, metrics
+
+
+# ==========================================================================
+# prefill / decode (serving)
+# ==========================================================================
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    """ShapeDtypeStruct tree of the decode cache (dry-run stand-in)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, cache_len))
+
+
+def _empty_attn_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dt) -> Params:
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dt),
+        }
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
+    """Fixed-capacity decode cache, all-zero, position 0."""
+    dt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    gsz = group_size(cfg)
+    G = n_scan_groups(cfg)
+
+    def one_group():
+        if cfg.family in ("ssm", "hybrid"):
+            sub = [L.mamba2_init_cache(cfg, batch, dt) for _ in range(gsz)]
+        else:
+            sub = [_empty_attn_cache(cfg, batch, cache_len, dt)
+                   for _ in range(gsz)]
+        g = jax.tree.map(lambda *xs: jnp.stack(xs), *sub)
+        if cfg.family == "hybrid":
+            g = {"mamba": g,
+                 "attn": _empty_attn_cache(cfg, batch, cache_len, dt)}
+        return g
+
+    groups = [one_group() for _ in range(G)]
+    cache: Params = {
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.first_dense_layers:
+        cache["dense0"] = [
+            _empty_attn_cache(cfg, batch, cache_len, dt)
+            for _ in range(cfg.first_dense_layers)]
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict, cache_len: int,
+            shard: Shard = no_shard) -> Tuple[jax.Array, Params]:
+    """Full-sequence prefill → (last-position logits, primed cache)."""
+    x = embed_in(cfg, params, batch, shard)
+    S = x.shape[1]
+    gsz = group_size(cfg)
+    cache: Params = {"pos": jnp.asarray(S, jnp.int32)}
+
+    d0 = []
+    for blk in params.get("dense0", []):
+        x, c = _attn_block(blk, cfg, x, window=0, shard=shard,
+                           mode="prefill", cache=cache_len)
+        d0.append(c)
+    if d0:
+        cache["dense0"] = d0
+
+    def body(x, xs):
+        gp, gi = xs
+        subcaches = []
+        for i in range(gsz):
+            sub = jax.tree.map(lambda l, i=i: l[i], gp)
+            if cfg.family in ("ssm", "hybrid"):
+                x, c = _mamba_block(sub, cfg, x, shard=shard, mode="prefill")
+            else:
+                x, c = _attn_block(sub, cfg, x, window=_window_for(cfg, i),
+                                   shard=shard, mode="prefill",
+                                   cache=cache_len)
+            subcaches.append(c)
+        g = jax.tree.map(lambda *cs: jnp.stack(cs), *subcaches)
+        if cfg.family == "hybrid":
+            sp = _select_shared(params, gi, cfg.n_shared_blocks)
+            x, ac = _attn_block(sp, cfg, x, window=0, shard=shard,
+                                mode="prefill", cache=cache_len)
+            g = {"mamba": g, "attn": ac}
+        return x, g
+
+    G = n_scan_groups(cfg)
+    x, gcaches = jax.lax.scan(_remat(cfg, body), x,
+                              (params["blocks"], jnp.arange(G)))
+    cache["blocks"] = gcaches
+    logits = unembed(cfg, params, x[:, -1:, :], shard)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                batch: Dict, shard: Shard = no_shard
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step: batch holds "token" (B,1) or "embed" (B,1,d)."""
+    x = embed_in(cfg, params, batch, shard)
+    pos = cache["pos"]
+    gsz = group_size(cfg)
+    new_cache: Params = {"pos": pos + 1}
+
+    if "dense0" in cache:
+        nd0 = []
+        for blk, c in zip(params["dense0"], cache["dense0"]):
+            x, nc = _attn_block(blk, cfg, x, window=0, shard=shard,
+                                mode="decode", cache=c, pos=pos)
+            nd0.append(nc)
+        new_cache["dense0"] = nd0
+
+    def body(x, xs):
+        gp, gc, gi = xs
+        subcaches = []
+        for i in range(gsz):
+            sub = jax.tree.map(lambda l, i=i: l[i], gp)
+            if cfg.family in ("ssm", "hybrid"):
+                mc = gc["mamba"] if cfg.family == "hybrid" else gc
+                subc = jax.tree.map(lambda l, i=i: l[i], mc)
+                x, c = _mamba_block(sub, cfg, x, shard=shard, mode="decode",
+                                    cache=subc)
+            else:
+                subc = jax.tree.map(lambda l, i=i: l[i], gc)
+                x, c = _attn_block(sub, cfg, x, window=_window_for(cfg, i),
+                                   shard=shard, mode="decode", cache=subc,
+                                   pos=pos)
+            subcaches.append(c)
+        g = jax.tree.map(lambda *cs: jnp.stack(cs), *subcaches)
+        if cfg.family == "hybrid":
+            sp = _select_shared(params, gi, cfg.n_shared_blocks)
+            x, ac = _attn_block(sp, cfg, x, window=0, shard=shard,
+                                mode="decode", cache=gc["attn"], pos=pos)
+            g = {"mamba": g, "attn": ac}
+        return x, g
+
+    G = n_scan_groups(cfg)
+    x, gcaches = jax.lax.scan(body, x, (params["blocks"], cache["blocks"],
+                                        jnp.arange(G)))
+    new_cache["blocks"] = gcaches
+    logits = unembed(cfg, params, x, shard)
+    return logits, new_cache

@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW, schedules, clipping, compression."""
+from repro.optim.adamw import (AdamWConfig, apply, clip_by_global_norm,
+                               global_norm, init, params_from_state)
+from repro.optim.compression import compress, decompress, init_residuals
+from repro.optim.schedule import constant, inverse_sqrt, \
+    linear_warmup_cosine
+
+__all__ = ["AdamWConfig", "apply", "clip_by_global_norm", "global_norm",
+           "init", "params_from_state", "compress", "decompress",
+           "init_residuals", "constant", "inverse_sqrt",
+           "linear_warmup_cosine"]

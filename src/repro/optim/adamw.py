@@ -1,0 +1,105 @@
+"""AdamW from scratch (decoupled weight decay), pytree-native.
+
+Mixed precision: model params may be bf16; the optimizer keeps float32
+master copies plus float32 first/second moments.  Update math runs in f32
+and casts back to the param dtype.
+
+State layout (a pytree mirroring params at every leaf):
+    {"step": i32 scalar, "master": f32 params, "m": f32, "v": f32}
+
+ZeRO-1: :func:`repro.sharding.zero1_pspecs` shards the master/m/v leaves
+over the data axes on top of the parameter sharding — the update is then
+computed shard-locally and the fresh params are all-gathered by XLA where
+the forward needs them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0           # global-norm clip; 0 disables
+    # gradient compression (see compression.py); "none" | "bf16_ef"
+    compression: str = "none"
+
+
+def init(params) -> Dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), \
+        norm
+
+
+def _decayable(path) -> bool:
+    """No weight decay on norms/scales/biases/1-d leaves."""
+    last = str(getattr(path[-1], "key", ""))
+    return last not in ("scale", "bq", "bk", "bv", "a_log", "dt_bias",
+                        "d_skip", "conv_bx", "conv_bbc")
+
+
+def apply(state: Dict, grads, cfg: AdamWConfig,
+          lr_scale: jax.Array | float = 1.0) -> Tuple[Dict, object, Dict]:
+    """One AdamW step.  Returns (new_state, new_params, metrics)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+
+    def upd(path, master, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and _decayable(path):
+            delta = delta + cfg.weight_decay * master
+        return master - lr * delta
+
+    new_master = jax.tree_util.tree_map_with_path(
+        upd, state["master"], new_m, new_v)
+    new_state = {"step": step, "master": new_master, "m": new_m,
+                 "v": new_v}
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+    return new_state, new_master, metrics
+
+
+def params_from_state(state: Dict, like) -> object:
+    """Cast master params back to the model's compute dtypes."""
+    return jax.tree.map(lambda mp, p: mp.astype(p.dtype),
+                        state["master"], like)

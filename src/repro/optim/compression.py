@@ -1,0 +1,42 @@
+"""Gradient compression with error feedback.
+
+``bf16_ef``: gradients are rounded to bf16 before the (XLA-emitted)
+cross-replica reduction; the rounding error is carried in a per-leaf f32
+residual and added back the next step.  Halves the gradient all-reduce
+bytes — the dominant collective of data-parallel training — at ≈0 quality
+cost (the error-feedback guarantee).  This is one of the distributed-
+optimization extensions recorded in EXPERIMENTS.md §Perf.
+
+Under ``jit`` the compression is expressed as a cast *before* the pmean /
+psum-equivalent sharding constraint, so XLA's collective runs on bf16
+buffers; the residual state keeps the method exact in expectation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, residuals) -> Tuple[object, object]:
+    """Returns (bf16 grads to feed the reduction, new residuals)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        gc = gf.astype(jnp.bfloat16)
+        return gc, gf - gc.astype(jnp.float32)
+
+    pairs = jax.tree.map(one, grads, residuals)
+    comp = jax.tree.map(lambda pr: pr[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda pr: pr[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res
+
+
+def decompress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)

@@ -1,0 +1,24 @@
+"""LR schedules as pure ``step -> scale`` functions (scale multiplies the
+optimizer's base lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(step):
+    return jnp.ones_like(step, jnp.float32)
+
+
+def linear_warmup_cosine(step, *, warmup: int, total: int,
+                         min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def inverse_sqrt(step, *, warmup: int):
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    return jnp.minimum(s / jnp.maximum(warmup, 1),
+                       jnp.sqrt(warmup / s))

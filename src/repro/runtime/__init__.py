@@ -1,0 +1,8 @@
+from repro.runtime.pipeline import bubble_fraction, gpipe
+from repro.runtime.trainer import (SimulatedFailure, StragglerMonitor,
+                                   Trainer, TrainerConfig, elastic_restore,
+                                   make_train_step)
+
+__all__ = ["bubble_fraction", "gpipe", "SimulatedFailure",
+           "StragglerMonitor", "Trainer", "TrainerConfig",
+           "elastic_restore", "make_train_step"]

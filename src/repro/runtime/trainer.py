@@ -1,0 +1,301 @@
+"""Fault-tolerant distributed training loop.
+
+Assembles the stack: config → TRA sharding plan → jitted train step →
+AdamW → checkpoint/restart.  Designed so that every piece of state needed
+to survive a node failure lives in exactly two places: the CheckpointStore
+(durable) and the DataLoader step counter (restored from the checkpoint's
+``extra``); a restart is therefore byte-reproducible (tested).
+
+Fault-tolerance model (1000+ nodes):
+
+* **Checkpoint/restart** — async checkpoints every ``ckpt_every`` steps;
+  a crash loses at most ``ckpt_every`` steps of work.  Saves are atomic
+  (COMMIT marker), so a failure *during* a save is also safe.
+* **Failure injection** — ``train(..., failure_injector=...)`` raises
+  :class:`SimulatedFailure` inside the step loop; the loop recovers
+  through the same restore path a real restart would take.
+* **Straggler mitigation** — :class:`StragglerMonitor` keeps an EMA of
+  step wall-time and flags outliers; on a real cluster the runner responds
+  by evicting the slow host and re-meshing (the elastic path below).  In
+  synchronous SPMD this is the correct lever: one slow chip gates the
+  collective, so the fix is topology surgery, not per-op tricks.
+* **Elastic re-scale** — checkpoints are topology-free (unsharded leaves),
+  so :func:`elastic_restore` can bring a run up on a *different* mesh;
+  the TRA planner re-plans placements for the new mesh and the state is
+  re-sharded on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, DataLoader
+from repro.models import init_params, loss_fn
+from repro.models.layers import no_shard
+from repro.optim import AdamWConfig, adamw
+from repro.optim import schedule as schedules
+from repro.sharding import (batch_pspecs, make_sharder, param_pspecs,
+                            plan_arch, zero1_pspecs)
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    accum_steps: int = 1           # microbatch gradient accumulation
+    warmup: int = 10
+    zero1: bool = True             # shard optimizer state over data axes
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class StragglerMonitor:
+    """EMA step-time tracker; flags steps slower than ``threshold×`` EMA."""
+
+    def __init__(self, threshold: float = 2.0, decay: float = 0.9):
+        self.threshold = threshold
+        self.decay = decay
+        self.ema: Optional[float] = None
+        self.flagged: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        straggler = self.ema is not None and dt > self.threshold * self.ema
+        self.ema = dt if self.ema is None else \
+            self.decay * self.ema + (1 - self.decay) * dt
+        if straggler:
+            self.flagged.append((step, dt))
+        return straggler
+
+
+def make_train_step(cfg: ModelConfig, acfg: AdamWConfig,
+                    schedule: Callable, sharder) -> Callable:
+    """Pure (opt_state, batch) -> (opt_state, metrics) step.
+
+    With ``accum > 1`` the batch carries a leading microbatch dim and
+    gradients accumulate in f32 before the (single) reduction — which is
+    where bf16-with-error-feedback compression applies.
+    """
+    def cast_params(master):
+        dt = jnp.dtype(cfg.dtype)
+
+        def one(path, leaf):
+            last = str(getattr(path[-1], "key", ""))
+            keep_f32 = last in ("scale", "a_log", "dt_bias", "d_skip",
+                                "router")
+            return leaf if keep_f32 else leaf.astype(dt)
+
+        return jax.tree_util.tree_map_with_path(one, master)
+
+    def step_fn(opt_state, batch):
+        params = cast_params(opt_state["master"])
+
+        def lf(p, b):
+            return loss_fn(cfg, p, b, sharder)
+
+        if batch.get("tokens", batch.get("embeds")).ndim == \
+                2 + (0 if cfg.input_mode == "tokens" else 1):
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+        else:
+            # leading microbatch dim: scan-accumulate f32 grads
+            def mb(carry, b):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lf, has_aux=True)(params, b)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), carry, grads)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ms) = jax.lax.scan(mb, zeros, batch)
+            n = losses.shape[0]
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        scale = schedule(opt_state["step"])
+        new_state, _, opt_metrics = adamw.apply(opt_state, grads, acfg,
+                                                lr_scale=scale)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return step_fn
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 tcfg: TrainerConfig, mesh=None, shape=None):
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.store = CheckpointStore(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.monitor = StragglerMonitor()
+
+        if mesh is not None:
+            from repro.configs.base import ShapeSpec
+            shape = shape or ShapeSpec("train", data_cfg.seq_len,
+                                       data_cfg.global_batch, "train")
+            self.plan = plan_arch(cfg, shape, mesh)
+            self.sharder = make_sharder(mesh, self.plan.act_axis_map)
+        else:
+            self.plan = None
+            self.sharder = no_shard
+
+        sched = lambda s: schedules.linear_warmup_cosine(
+            s, warmup=tcfg.warmup, total=tcfg.steps)
+        self._step_fn = make_train_step(cfg, tcfg.adamw, sched,
+                                        self.sharder)
+        self._jit_step = None
+        self.loader = DataLoader(data_cfg)
+        self.opt_state = None
+        self.history: list = []
+
+    # -- state -------------------------------------------------------------
+    def _shardings_for(self, opt_state_shapes):
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+        pmap = self.plan.param_axis_map
+        spec_fn = zero1_pspecs if self.tcfg.zero1 else param_pspecs
+        master = spec_fn(self.mesh, pmap, opt_state_shapes["master"])
+        return {
+            "step": NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec()),
+            "master": jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), master),
+            "m": jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), master),
+            "v": jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), master),
+        }
+
+    def init_state(self) -> None:
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        self.opt_state = adamw.init(params)
+        if self.mesh is not None:
+            sh = self._shardings_for(self.opt_state)
+            self.opt_state = jax.tree.map(jax.device_put, self.opt_state,
+                                          sh)
+
+    def restore(self) -> bool:
+        step = self.store.latest_step()
+        if step is None:
+            return False
+        if self.opt_state is None:
+            params = jax.eval_shape(
+                lambda: init_params(self.cfg,
+                                    jax.random.PRNGKey(self.tcfg.seed)))
+            like = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                    "master": jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                       jnp.float32), params),
+                    "m": jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                       jnp.float32), params),
+                    "v": jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape,
+                                                       jnp.float32), params)}
+        else:
+            like = self.opt_state
+        sh = self._shardings_for(like) if self.mesh is not None else None
+        self.opt_state, extra = self.store.restore(like, step, sh)
+        self.loader.load_state_dict({"step": extra["data_step"]})
+        return True
+
+    def init_or_restore(self) -> None:
+        if not self.restore():
+            self.init_state()
+
+    # -- loop --------------------------------------------------------------
+    def _compiled_step(self):
+        if self._jit_step is None:
+            if self.mesh is not None:
+                donate = (0,)
+                self._jit_step = jax.jit(self._step_fn,
+                                         donate_argnums=donate)
+            else:
+                self._jit_step = jax.jit(self._step_fn,
+                                         donate_argnums=(0,))
+        return self._jit_step
+
+    def save(self) -> None:
+        self.store.wait()
+        step = int(jax.device_get(self.opt_state["step"]))
+        self.store.save_async(step, self.opt_state,
+                              extra={"data_step": self.loader.step})
+
+    def train(self, steps: Optional[int] = None,
+              failure_injector: Optional[Callable[[int], None]] = None
+              ) -> list:
+        steps = steps or self.tcfg.steps
+        if self.opt_state is None:
+            self.init_or_restore()
+        fn = self._compiled_step()
+        done = int(jax.device_get(self.opt_state["step"]))
+        while done < steps:
+            batch_np = next(self.loader)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            try:
+                if failure_injector is not None:
+                    failure_injector(done)
+                self.opt_state, metrics = fn(self.opt_state, batch)
+                done = int(jax.device_get(self.opt_state["step"]))
+            except SimulatedFailure:
+                # node loss: recover exactly as a fresh process would
+                self.store.wait()
+                self.opt_state = None
+                self._jit_step = None
+                self.init_or_restore()
+                fn = self._compiled_step()
+                done = int(jax.device_get(self.opt_state["step"]))
+                continue
+            dt = time.perf_counter() - t0
+            self.monitor.observe(done, dt)
+            rec = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+            rec["step"] = done
+            rec["wall"] = dt
+            self.history.append(rec)
+            if done % self.tcfg.ckpt_every == 0:
+                self.save()
+        self.store.wait()
+        return self.history
+
+
+def elastic_restore(store: CheckpointStore, cfg: ModelConfig,
+                    new_mesh, shape, tcfg: TrainerConfig):
+    """Bring a checkpoint up on a different mesh (elastic re-scale)."""
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(tcfg.seed)))
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    like = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+            "master": f32(params), "m": f32(params), "v": f32(params)}
+    plan = plan_arch(cfg, shape, new_mesh)
+    from jax.sharding import NamedSharding
+    spec_fn = zero1_pspecs if tcfg.zero1 else param_pspecs
+    master = spec_fn(new_mesh, plan.param_axis_map, like["master"])
+    sh = {"step": NamedSharding(new_mesh, jax.sharding.PartitionSpec()),
+          "master": jax.tree.map(lambda s: NamedSharding(new_mesh, s),
+                                 master),
+          "m": jax.tree.map(lambda s: NamedSharding(new_mesh, s), master),
+          "v": jax.tree.map(lambda s: NamedSharding(new_mesh, s), master)}
+    state, extra = store.restore(like, None, sh)
+    return state, extra, plan

@@ -1,0 +1,11 @@
+"""TRA-cost-driven sharding: planner (strategy) + specs (PartitionSpecs)."""
+from repro.sharding.planner import (ArchPlan, PairDecision, PlannerMesh,
+                                    plan_arch, price_moe, price_pair)
+from repro.sharding.specs import (batch_pspecs, cache_pspecs, logits_pspec,
+                                  make_sharder, param_pspecs,
+                                  param_shardings, zero1_pspecs)
+
+__all__ = ["ArchPlan", "PairDecision", "PlannerMesh", "plan_arch",
+           "price_moe", "price_pair", "batch_pspecs", "cache_pspecs",
+           "logits_pspec", "make_sharder", "param_pspecs",
+           "param_shardings", "zero1_pspecs"]

@@ -1,0 +1,344 @@
+"""TRA-cost-driven sharding planner — the paper's technique as the
+framework's distribution engine.
+
+Every heavy matmul (pair) in a model — QKV/out projections, MLP up/down,
+MoE experts, Mamba2 in/out projections, embedding, LM head — is expressed
+as a TRA join+aggregate chain over chunked operands:
+
+    H[b,h] = Σ_k X[b,k]·W1[k,h] ;  Y[b,o] = Σ_h H[b,h]·W2[h,o]
+    ≙  Σ_{(⟨0,2⟩,+)}(⋈_{(⟨1⟩,⟨0⟩,×)}(Σ_{(⟨0,2⟩,+)}(⋈_{(⟨1⟩,⟨0⟩,×)}(R_X,R_W1)), R_W2))
+
+For each candidate *weight placement* pair (the paper's ALL / PART_D
+predicates: replicated, column-partitioned, row-partitioned over the model
+mesh axis) the paper's optimizer (repro.core.optimize — equivalence rules
+R1/R2 + the BMM/CPMM/RMM domain rules, priced by the exact §4.3
+float-movement cost model) finds the cheapest IA realization with the
+output back in batch-partitioned form.  The planner thereby *derives*:
+
+* data parallelism      — (ALL, ALL): weights replicated, zero steady-state
+                          forward comm (the paper's TRA-DP);
+* Megatron tensor parallelism — (col, row): the first local join needs no
+                          movement and leaves H feature-partitioned; the
+                          second is a co-partitioned CPMM join whose
+                          aggregation is the two-phase R2-5 rule — i.e. a
+                          reduce-scatter.  This is the paper's TRA-MP,
+                          recovered from first principles;
+* everything in between — (col, ALL), (ALL, row), … are priced too and the
+                          full candidate log is kept for EXPERIMENTS.md.
+
+Backward-pass communication mirrors the forward structure (dX retraces the
+chain with transposed weights; dW joins are co-partitioned on the batch
+dim), so the steady-state per-step cost we compare is ``3 × fwd`` plus the
+gradient synchronization over the data axis — which is placement-invariant
+(``w`` global floats either way) and therefore dropped from the
+comparison.  Results are memoized per (shape, mesh) signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import (Placement, RelType, TraAgg, TraInput, TraJoin,
+                        get_kernel, optimize)
+
+# --------------------------------------------------------------------------
+# Mesh description (hashable, planner-level)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerMesh:
+    """Logical 2-D planning mesh: all data-parallel axes folded into one."""
+
+    data_axes: Tuple[str, ...]          # e.g. ("pod", "data")
+    model_axis: str
+    data_size: int
+    model_size: int
+
+    @staticmethod
+    def from_mesh(mesh) -> "PlannerMesh":
+        names = list(mesh.axis_names)
+        model = names[-1]
+        data = tuple(n for n in names if n != model)
+        dsize = math.prod(mesh.shape[a] for a in data) if data else 1
+        return PlannerMesh(data, model, dsize, mesh.shape[model])
+
+
+@dataclasses.dataclass(frozen=True)
+class PairDecision:
+    strategy: str                       # "dp" | "tp" | "fsdp" | mixed tag
+    w1: str                             # "all" | "col" | "row"
+    w2: str
+    w_moved: bool                       # winner gathers weights per step
+    cost: int                           # fwd floats moved (wire metric)
+    candidates: Tuple[Tuple[str, int], ...]
+
+
+_PLACE = {
+    "all": lambda m: Placement.replicated(),
+    "col": lambda m: Placement.partitioned((1,), (m,)),
+    "row": lambda m: Placement.partitioned((0,), (m,)),
+}
+
+
+def _weights_moved(plan, names=("W1", "W2")) -> bool:
+    """True if any weight input feeds a BCAST/SHUF in the winning plan
+    (FSDP-style per-step gather rather than in-place use)."""
+    from repro.core.plan import Bcast as _B, IAInput as _I, Shuf as _S
+    from repro.core.plan import children, postorder as _post
+    moved = False
+    for n in _post(plan):
+        if isinstance(n, (_B, _S)):
+            for c in children(n):
+                if isinstance(c, _I) and c.name in names \
+                        and c.placement.kind == "partitioned":
+                    moved = True
+    return moved
+
+
+@functools.lru_cache(maxsize=None)
+def price_pair(tokens: int, d_in: int, d_hidden: int, d_out: int,
+               data_size: int, model_size: int,
+               allow_replicated: bool = True) -> PairDecision:
+    """Price every weight-placement pair through the TRA optimizer.
+
+    ``allow_replicated=False`` excludes replicated weight *storage* — the
+    memory gate.  The paper's comm-only cost model famously ran out of GPU
+    memory in its own §5.4 ("our simple Python-based TRA implementation
+    lacked a proper memory management system"); at 1000-node scale the
+    framework instead refuses to replicate weights that do not fit the
+    budget, which is exactly the paper's TRA-DP choice of *storing* weights
+    partitioned and broadcasting them per step (≙ FSDP on TPU).
+    """
+    d_ax, m_ax = "D", "M"
+    sd, sm = max(data_size, 1), max(model_size, 1)
+    axis_sizes = {d_ax: sd, m_ax: sm}
+
+    tb = max(tokens // sd, 1)
+    kb, hb, ob = (max(d_in // sm, 1), max(d_hidden // sm, 1),
+                  max(d_out // sm, 1))
+    x = TraInput("X", RelType((sd, sm), (tb, kb)))
+    w1 = TraInput("W1", RelType((sm, sm), (kb, hb)))
+    w2 = TraInput("W2", RelType((sm, sm), (hb, ob)))
+    h = TraAgg(TraJoin(x, w1, (1,), (0,), get_kernel("matMul")),
+               (0, 2), get_kernel("matAdd"))
+    y = TraAgg(TraJoin(h, w2, (1,), (0,), get_kernel("matMul")),
+               (0, 2), get_kernel("matAdd"))
+
+    target = Placement.partitioned((0,), (d_ax,))
+    tags = list(_PLACE) if allow_replicated else ["col", "row"]
+    results = []
+    plans = {}
+    for t1 in tags:
+        for t2 in tags:
+            try:
+                res = optimize(
+                    y,
+                    {"X": Placement.partitioned((0,), (d_ax,)),
+                     "W1": _PLACE[t1](m_ax), "W2": _PLACE[t2](m_ax)},
+                    site_axes=(d_ax, m_ax), axis_sizes=axis_sizes,
+                    target=target, try_logical_rewrites=False)
+            except ValueError:
+                continue
+            results.append(((t1, t2), res.cost))
+            plans[(t1, t2)] = res.plan
+    if not results:
+        raise ValueError("no valid placement for matmul pair")
+    # prefer cheaper; on ties prefer more-sharded weights (memory)
+    shardedness = {"all": 0, "col": 1, "row": 1}
+
+    def rank(item):
+        (t1, t2), cost = item
+        return (cost, -(shardedness[t1] + shardedness[t2]))
+
+    results.sort(key=rank)
+    (t1, t2), cost = results[0]
+    moved = _weights_moved(plans[(t1, t2)])
+    if (t1, t2) == ("all", "all"):
+        strategy = "dp"
+    elif moved:
+        strategy = "fsdp"
+    else:
+        strategy = "tp"
+    return PairDecision(strategy, t1, t2, moved, cost,
+                        tuple((f"{a}+{b}", c) for (a, b), c in results))
+
+
+@functools.lru_cache(maxsize=None)
+def price_moe(tokens: int, d_model: int, d_ff: int, n_experts: int,
+              top_k: int, data_size: int, model_size: int,
+              capacity_factor: float = 1.25) -> Tuple[str, int, int]:
+    """Expert-parallel vs tensor-parallel experts, paper cost units.
+
+    * EP — experts are ``PART_expert`` over the model axis; the token
+      dispatch into the (E, C, d) buffer and the return combine are each a
+      ``SHUF`` (all-to-all) of the full dispatch relation:
+      ``cost = 2 × T·K·cf·d`` floats.
+    * TP — every expert's FFN is Megatron-split over the model axis; the
+      dispatch stays local but each of the T·K routed tokens pays the
+      two-phase aggregation (reduce-scatter) on the way out of the pair,
+      priced by :func:`price_pair` with T·K tokens.
+    """
+    routed = int(tokens * top_k * capacity_factor)
+    ep_cost = 2 * routed * d_model
+    tp = price_pair(max(tokens * top_k, 1), d_model, d_ff, d_model,
+                    data_size, model_size)
+    # force a sharded strategy for TP pricing (dp handled by EP comparison)
+    tp_cost = dict(tp.candidates).get("col+row", tp.cost)
+    if ep_cost <= tp_cost:
+        return "ep", ep_cost, tp_cost
+    return "tp", ep_cost, tp_cost
+
+
+# --------------------------------------------------------------------------
+# Whole-architecture plan
+# --------------------------------------------------------------------------
+
+
+# Replicated-storage budget per chip (weights in bf16).  TPU v5e has 16 GB
+# HBM; at scale, weights+grads+optimizer+activations must share it, so only
+# genuinely small models may replicate (the paper's §5.4 OOM lesson).
+REPLICATED_BUDGET_BYTES = 2 << 30
+
+
+@dataclasses.dataclass
+class ArchPlan:
+    """Logical-axis → physical-mesh-axis mappings + the decision log.
+
+    ``param_axis_map`` drives weight *storage* specs; ``act_axis_map``
+    drives activation constraints.  They differ under FSDP: weights stored
+    sharded (gathered per step by XLA) while activations keep no feature
+    sharding.
+    """
+
+    param_axis_map: Dict[str, Optional[Tuple[str, ...]]]
+    act_axis_map: Dict[str, Optional[Tuple[str, ...]]]
+    decisions: Dict[str, object]
+    mesh: PlannerMesh
+
+    def describe(self) -> str:
+        lines = [f"mesh: data={self.mesh.data_axes}×{self.mesh.data_size} "
+                 f"model={self.mesh.model_axis}×{self.mesh.model_size}"]
+        for comp, dec in sorted(self.decisions.items()):
+            if isinstance(dec, PairDecision):
+                lines.append(
+                    f"  {comp:8s} → {dec.strategy:8s} (W1={dec.w1}, "
+                    f"W2={dec.w2}) cost={dec.cost:,}  "
+                    f"candidates={list(dec.candidates)[:4]}")
+            else:
+                lines.append(f"  {comp:8s} → {dec}")
+        pa = {k: v for k, v in self.param_axis_map.items() if v}
+        aa = {k: v for k, v in self.act_axis_map.items() if v}
+        lines.append(f"  param axes: {pa}")
+        lines.append(f"  act axes:   {aa}")
+        return "\n".join(lines)
+
+
+def plan_arch(cfg: ModelConfig, shape: ShapeSpec, mesh) -> ArchPlan:
+    """Run the paper's cost model over every component of ``cfg``."""
+    from repro.models.model import count_params
+
+    pm = PlannerMesh.from_mesh(mesh)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        # training runs gradient accumulation at one sequence per data
+        # shard per microbatch; weight movement (FSDP gathers) recurs per
+        # microbatch while activation collectives scale with tokens, so
+        # the honest comparison prices ONE microbatch.
+        accum = max(1, shape.global_batch // max(pm.data_size, 1))
+        tokens = max(tokens // accum, 1)
+    sd, sm = pm.data_size, pm.model_size
+    m = pm.model_axis
+    decisions: Dict[str, object] = {}
+
+    replicated_bytes = 2 * count_params(cfg)
+    allow_rep = replicated_bytes <= REPLICATED_BUDGET_BYTES
+    decisions["memory-gate"] = (
+        f"replicated weights = {replicated_bytes / 2**30:.2f} GiB "
+        f"({'fits' if allow_rep else 'exceeds'} "
+        f"{REPLICATED_BUDGET_BYTES / 2**30:.0f} GiB budget) → "
+        f"{'replication allowed' if allow_rep else 'sharded storage only'}")
+
+    data_ok = shape.global_batch % max(sd, 1) == 0
+    base: Dict[str, Optional[Tuple[str, ...]]] = {
+        "data": pm.data_axes if data_ok else None,
+        "attn": None, "kv": None, "ffn": None, "expert": None,
+        "ssm": None, "vocab": None, "seq": None,
+    }
+    pmap = dict(base)
+    amap = dict(base)
+    if not data_ok and shape.kind == "decode":
+        # batch below the data size (long-context decode): context-shard
+        # the KV caches' sequence dim over the data axes instead
+        amap["seq"] = pm.data_axes
+
+    def decide(component: str, logical: str, d_hidden: int,
+               act_divisor: int) -> None:
+        """Weight *storage* shards whenever the flat weight dim divides
+        the model axis; feature-dim *activation* sharding additionally
+        needs ``act_divisor`` (e.g. the head count) to divide."""
+        dec = price_pair(tokens, cfg.d_model, d_hidden, cfg.d_model,
+                         sd, sm, allow_replicated=allow_rep)
+        decisions[component] = dec
+        if dec.strategy in ("tp", "fsdp") and d_hidden % sm == 0:
+            pmap[logical] = (m,)
+        if dec.strategy == "tp" and act_divisor % sm == 0:
+            amap[logical] = (m,)
+
+    if cfg.has_attention:
+        decide("attn", "attn", cfg.n_heads * max(cfg.head_dim, 1),
+               cfg.n_heads)
+        if pmap["attn"] and cfg.n_kv_heads:
+            if (cfg.n_kv_heads * cfg.head_dim) % sm == 0:
+                pmap["kv"] = (m,)
+            if amap["attn"] and cfg.n_kv_heads % sm == 0:
+                amap["kv"] = (m,)
+        if shape.kind in ("decode", "prefill"):
+            # Inference is KV-cache-bound: the cache must shard over the
+            # model axis regardless of the weight-comm decision — over kv
+            # heads when divisible, else over the cache sequence dim
+            # (context parallelism).  Matmul comm is second-order here.
+            if not cfg.use_mla and cfg.n_kv_heads % sm == 0 \
+                    and cfg.n_heads % sm == 0:
+                pmap["attn"] = amap["attn"] = (m,)
+                pmap["kv"] = amap["kv"] = (m,)
+                decisions["attn-serve"] = "TP (KV-head-sharded cache)"
+            else:
+                amap["seq"] = (m,)
+                decisions["attn-serve"] = ("context-sharded cache "
+                                           "(kv heads % model != 0 or MLA)")
+
+    if cfg.d_ff:
+        decide("mlp", "ffn", cfg.d_ff, cfg.d_ff)
+
+    if cfg.n_experts:
+        tag, ep_cost, tp_cost = price_moe(
+            tokens, cfg.d_model, cfg.d_ff_expert, cfg.n_experts,
+            cfg.top_k, sd, sm, cfg.moe_capacity_factor)
+        decisions["moe"] = (f"{tag} (ep={ep_cost:,} vs tp={tp_cost:,})")
+        if tag == "ep" and cfg.n_experts % sm == 0:
+            pmap["expert"] = (m,)
+            amap["expert"] = (m,)
+        elif cfg.d_ff_expert % sm == 0:
+            pmap["ffn"] = (m,)
+            amap["ffn"] = (m,)
+
+    if cfg.ssm_state:
+        decide("ssm", "ssm", cfg.d_inner, cfg.d_inner)
+
+    # LM head / embedding: vocab-sharding keeps the logits partitioned
+    # (softmax normalizer is a tiny all-reduce) at zero extra fwd cost and
+    # shards the largest single tensor — preferred whenever divisible,
+    # mandatory when replication is memory-gated.
+    if cfg.vocab_size % sm == 0:
+        pmap["vocab"] = (m,)
+        amap["vocab"] = (m,)
+        decisions["vocab"] = "col (vocab-sharded embed/head + logits)"
+    else:
+        decisions["vocab"] = "replicated (vocab % model axis != 0)"
+
+    return ArchPlan(pmap, amap, decisions, pm)

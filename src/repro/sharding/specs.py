@@ -1,0 +1,270 @@
+"""PartitionSpec assignment: ArchPlan → param/batch/cache specs + sharder.
+
+The planner decides *strategies* (ArchPlan.axis_map maps logical axis names
+used inside the model — "data", "attn", "kv", "ffn", "expert", "ssm",
+"vocab", "seq" — to physical mesh axes).  This module turns those into:
+
+* a PartitionSpec pytree for the parameters (path-rule based),
+* PartitionSpecs for step inputs (token batches) and decode caches,
+* a ``shard`` closure for activation constraints inside the model,
+* optional ZeRO-style optimizer-state sharding over the data axes.
+
+Every rule guards divisibility: a dim that does not divide its axis size
+falls back to replication for that dim (GSPMD could pad, the explicit
+shard_map tests cannot).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding.planner import ArchPlan
+
+AxisMap = Dict[str, Optional[Tuple[str, ...]]]
+
+
+def _axis_size(mesh: Mesh, axes: Optional[Tuple[str, ...]]) -> int:
+    if not axes:
+        return 1
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _entry(mesh: Mesh, axis_map: AxisMap, logical: Optional[str],
+           dim_size: int):
+    """Physical spec entry for one dim, with a divisibility guard."""
+    if logical is None:
+        return None
+    phys = axis_map.get(logical)
+    if not phys:
+        return None
+    size = _axis_size(mesh, phys)
+    if size <= 1 or dim_size % size:
+        return None
+    return phys if len(phys) > 1 else phys[0]
+
+
+def _dedupe_axes(entries):
+    """A mesh axis may shard at most one dim: first claim wins."""
+    used = set()
+    out = []
+    for e in entries:
+        axes = (e,) if isinstance(e, str) else tuple(e or ())
+        if e is not None and any(a in used for a in axes):
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(e)
+    return out
+
+
+def make_sharder(mesh: Optional[Mesh], axis_map: AxisMap):
+    """Activation-constraint closure passed into the model as ``shard``."""
+    if mesh is None:
+        from repro.models.layers import no_shard
+        return no_shard
+
+    def shard(x: jax.Array, *logical):
+        entries = [None] * x.ndim
+        for d, name in enumerate(logical[:x.ndim]):
+            entries[d] = _entry(mesh, axis_map, name, x.shape[d])
+        entries = _dedupe_axes(entries)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*entries)))
+
+    # expose the data-parallel group count (MoE local dispatch keys on it)
+    shard.data_size = _axis_size(mesh, axis_map.get("data"))
+    return shard
+
+
+# --------------------------------------------------------------------------
+# Parameter specs (path rules)
+# --------------------------------------------------------------------------
+
+# (matcher keys, per-trailing-dim logical axes) — matched against the last
+# path components of each leaf; None entries replicate that dim.
+_RULES = [
+    (("embed", "w"), ("vocab", None)),
+    (("lm_head", "w"), (None, "vocab")),
+    # GQA
+    (("attn", "wq"), (None, "attn")),
+    (("attn", "bq"), ("attn",)),
+    (("attn", "wk"), (None, "kv")),
+    (("attn", "bk"), ("kv",)),
+    (("attn", "wv"), (None, "kv")),
+    (("attn", "bv"), ("kv",)),
+    (("attn", "wo"), ("attn", None)),
+    # MLA
+    (("attn", "wdkv"), (None, None)),
+    (("attn", "wuk"), (None, "attn")),
+    (("attn", "wuv"), (None, "attn")),
+    # MLP
+    (("mlp", "wi"), (None, "ffn")),
+    (("mlp", "wg"), (None, "ffn")),
+    (("mlp", "wo"), ("ffn", None)),
+    # MoE (EP shards the expert dim; TP-experts shard the ff dim)
+    (("moe", "router"), (None, None)),
+    (("moe", "wi"), ("expert", None, "ffn")),
+    (("moe", "wg"), ("expert", None, "ffn")),
+    (("moe", "wo"), ("expert", "ffn", None)),
+    (("shared", "wi"), (None, "ffn")),
+    (("shared", "wg"), (None, "ffn")),
+    (("shared", "wo"), ("ffn", None)),
+    # Mamba2
+    (("mix", "w_z"), (None, "ssm")),
+    (("mix", "w_x"), (None, "ssm")),
+    (("mix", "w_bc"), (None, None)),
+    (("mix", "w_dt"), (None, "ssm")),
+    (("mix", "conv_wx"), (None, "ssm")),
+    (("mix", "conv_bx"), ("ssm",)),
+    (("mix", "w_out"), ("ssm", None)),
+]
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        k = getattr(e, "key", None)
+        if k is None:
+            k = getattr(e, "idx", None)
+        out.append(str(k))
+    return tuple(out)
+
+
+def _leaf_spec(mesh: Mesh, axis_map: AxisMap, path, leaf) -> P:
+    keys = _path_keys(path)
+    for matcher, logical in _RULES:
+        if len(keys) >= len(matcher) and \
+                tuple(keys[-len(matcher):]) == tuple(matcher):
+            base = logical
+            break
+    else:
+        base = (None,) * leaf.ndim
+    # leading stack dims (scan groups / in-group layers) replicate
+    lead = leaf.ndim - len(base)
+    entries = [None] * lead + [
+        _entry(mesh, axis_map, name, leaf.shape[lead + i])
+        for i, name in enumerate(base)]
+    entries = _dedupe_axes(entries)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_pspecs(mesh: Mesh, axis_map: AxisMap, params_tree) -> object:
+    """PartitionSpec tree matching ``params_tree`` (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(mesh, axis_map, path, leaf),
+        params_tree)
+
+
+def param_shardings(mesh: Mesh, axis_map: AxisMap, params_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(mesh, axis_map, params_tree))
+
+
+def zero1_pspecs(mesh: Mesh, axis_map: AxisMap, params_tree) -> object:
+    """Optimizer-state specs: param specs + data-axis sharding on the
+    largest still-unsharded dim (ZeRO-1).  Beyond-paper optimization —
+    recorded in EXPERIMENTS.md §Perf."""
+    data_axes = axis_map.get("data")
+    base = param_pspecs(mesh, axis_map, params_tree)
+
+    def extend(path, leaf, spec: P):
+        if not data_axes or leaf.ndim == 0:
+            return spec
+        dsize = _axis_size(mesh, data_axes)
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # choose the largest unsharded dim divisible by the data size
+        cands = [(leaf.shape[i], i) for i, e in enumerate(entries)
+                 if e is None and leaf.shape[i] % dsize == 0
+                 and leaf.shape[i] >= dsize]
+        if not cands:
+            return spec
+        _, dim = max(cands)
+        entries[dim] = data_axes if len(data_axes) > 1 else data_axes[0]
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf, spec: extend(path, leaf, spec),
+        params_tree, base)
+
+
+# --------------------------------------------------------------------------
+# Step-input / cache specs
+# --------------------------------------------------------------------------
+
+def batch_pspecs(mesh: Mesh, axis_map: AxisMap, batch_tree,
+                 microbatched: bool = False) -> object:
+    """Token/label/embedding inputs: batch dim over the data axes.
+
+    ``microbatched`` — leaves carry a leading gradient-accumulation dim
+    (unsharded); the batch dim is dim 1.
+    """
+    bdim = 1 if microbatched else 0
+
+    def spec(leaf) -> P:
+        entries = [None] * leaf.ndim
+        entries[bdim] = _entry(mesh, axis_map, "data", leaf.shape[bdim])
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspecs(mesh: Mesh, axis_map: AxisMap, cfg: ModelConfig,
+                 cache_tree) -> object:
+    """Decode-cache specs.
+
+    Attention KV caches: (…, B, S, kv_heads|lora, hd) — batch over data
+    when divisible, else sequence over data ("seq" context parallelism);
+    kv heads over the model axis.  SSM states: (…, B, heads, N, P) — batch
+    over data, heads over the ssm axis.
+    """
+    def spec(path, leaf) -> P:
+        keys = _path_keys(path)
+        name = keys[-1]
+        entries = [None] * leaf.ndim
+        if name == "pos":
+            return P()
+        # find the batch dim: first dim after any leading stack dims.
+        # leaves are stacked (G, [gsz,] B, ...): detect by name/rank.
+        if name in ("k", "v"):                  # (..., B, S, KV, hd)
+            b, s, kv = leaf.ndim - 4, leaf.ndim - 3, leaf.ndim - 2
+            entries[b] = _entry(mesh, axis_map, "data", leaf.shape[b])
+            entries[s] = _entry(mesh, axis_map, "seq", leaf.shape[s])
+            entries[kv] = _entry(mesh, axis_map, "kv", leaf.shape[kv])
+        elif name in ("c_kv", "k_rope"):        # (..., B, S, r)
+            b, s = leaf.ndim - 3, leaf.ndim - 2
+            entries[b] = _entry(mesh, axis_map, "data", leaf.shape[b])
+            entries[s] = _entry(mesh, axis_map, "seq", leaf.shape[s])
+        elif name == "ssm":                     # (..., B, H, N, P)
+            b, h = leaf.ndim - 4, leaf.ndim - 3
+            entries[b] = _entry(mesh, axis_map, "data", leaf.shape[b])
+            entries[h] = _entry(mesh, axis_map, "ssm", leaf.shape[h])
+        elif name in ("conv_x", "conv_bc"):     # (..., B, W-1, C)
+            b, c = leaf.ndim - 3, leaf.ndim - 1
+            entries[b] = _entry(mesh, axis_map, "data", leaf.shape[b])
+            if name == "conv_x":
+                entries[c] = _entry(mesh, axis_map, "ssm", leaf.shape[c])
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def logits_pspec(mesh: Mesh, axis_map: AxisMap) -> P:
+    d = axis_map.get("data")
+    v = axis_map.get("vocab")
+    return P(d if not d or len(d) > 1 else d[0], None,
+             v if not v or len(v) > 1 else v[0])

@@ -1,0 +1,210 @@
+"""IA compilation, equivalence rules, optimizer and cost-model tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Bcast, IAInput, LocalAgg, LocalJoin, Placement,
+                        RelType, Shuf, TraAgg, TraFilter, TraInput, TraJoin,
+                        TraReKey, TraTransform, check_valid, comm_cost,
+                        compile_tra, describe, evaluate_ia, evaluate_tra,
+                        from_tensor, get_kernel, infer, optimize, to_tensor)
+from repro.core.optimize import logical_variants
+from repro.core import tra
+
+S = ("sites",)
+SZ = {"sites": 4}
+
+
+def matmul_plan(fl, fr, bl, br, name_l="A", name_r="B"):
+    ta = TraInput(name_l, RelType(fl, bl))
+    tb = TraInput(name_r, RelType(fr, br))
+    return TraAgg(TraJoin(ta, tb, (1,), (0,), get_kernel("matMul")),
+                  (0, 2), get_kernel("matAdd"))
+
+
+def rand_rel(key, f, b):
+    x = jax.random.normal(jax.random.PRNGKey(key),
+                          (f[0] * b[0], f[1] * b[1]), jnp.float32)
+    return from_tensor(x, b), x
+
+
+class TestCompile:
+    def test_table1_default_shapes(self):
+        plan = matmul_plan((4, 4), (4, 4), (8, 8), (8, 8))
+        ia = compile_tra(plan, {"A": Placement.partitioned((0,), S),
+                                "B": Placement.partitioned((0,), S)})
+        # default join = BCAST(left); default agg = SHUF then local agg
+        assert isinstance(ia, LocalAgg)
+        assert isinstance(ia.child, Shuf)
+        assert isinstance(ia.child.child, LocalJoin)
+        assert isinstance(ia.child.child.left, Bcast)
+        info = check_valid(ia)
+        assert info.rtype.key_shape == (4, 4)
+
+    def test_compiled_plan_equals_logical(self):
+        plan = matmul_plan((4, 4), (4, 4), (8, 8), (8, 8))
+        RA, A = rand_rel(0, (4, 4), (8, 8))
+        RB, B = rand_rel(1, (4, 4), (8, 8))
+        ia = compile_tra(plan, {"A": Placement.replicated(),
+                                "B": Placement.replicated()})
+        want = evaluate_tra(plan, {"A": RA, "B": RB})
+        got = evaluate_ia(ia, {"A": RA, "B": RB})
+        np.testing.assert_allclose(np.asarray(got.data),
+                                   np.asarray(want.data), rtol=1e-4, atol=1e-4)
+
+
+class TestCostModel:
+    """Exact float-movement accounting (paper §4.3)."""
+
+    def test_bcast_cost_is_f_times_s(self):
+        rt = RelType((4, 4), (8, 8))
+        inp = IAInput("A", rt, Placement.partitioned((0,), S))
+        f, s = 16 * 64, 4
+        # paper accounting: verbatim §4.3 BCAST = f×s
+        assert comm_cost(Bcast(inp), SZ, accounting="paper") == f * s
+        # wire accounting: ring all-gather = f×(s−1)
+        assert comm_cost(Bcast(inp), SZ) == f * (s - 1)
+
+    def test_bcast_of_replicated_is_free(self):
+        rt = RelType((4, 4), (8, 8))
+        inp = IAInput("A", rt, Placement.replicated())
+        assert comm_cost(Bcast(inp), SZ) == 0
+
+    def test_shuffle_cost_is_f(self):
+        rt = RelType((4, 4), (8, 8))
+        inp = IAInput("A", rt, Placement.partitioned((0,), S))
+        f, s = 16 * 64, 4
+        # paper accounting: SHUF = f (every tuple moves once)
+        assert comm_cost(Shuf(inp, (1,), S), SZ, accounting="paper") == f
+        # wire accounting: all-to-all keeps the diagonal → f×(s−1)/s
+        assert comm_cost(Shuf(inp, (1,), S), SZ) == f * (s - 1) // s
+
+    def test_noop_shuffle_is_free(self):
+        rt = RelType((4, 4), (8, 8))
+        inp = IAInput("A", rt, Placement.partitioned((0,), S))
+        assert comm_cost(Shuf(inp, (0,), S), SZ) == 0
+
+    def test_double_bcast_costs_double(self):
+        """Paper §4.3: no automatic algorithmic optimization — a stupid
+        double broadcast is costed twice (dedup happens via R2-1 rewrites,
+        not in the cost model)."""
+        rt = RelType((4, 4), (8, 8))
+        inp = IAInput("A", rt, Placement.partitioned((0,), S))
+        c1 = comm_cost(Bcast(inp), SZ)
+        # NOTE: second bcast of an ALL relation is free by placement — the
+        # paper's example refers to re-broadcast after placement loss; we
+        # model the placement-aware exact cost.
+        assert comm_cost(Bcast(Bcast(inp)), SZ) == c1
+
+    def test_two_phase_agg_cheaper_for_large_contraction(self):
+        # K blocks = 8 partials vs shuffling the whole join output
+        plan = matmul_plan((2, 8), (8, 2), (4, 4), (4, 4))
+        r = optimize(plan, {"A": Placement.partitioned((1,), S),
+                            "B": Placement.partitioned((0,), S)},
+                     S, SZ)
+        # best plan must use the two-phase (partial) aggregation
+        found_partial = "partial" in describe(r.plan)
+        assert found_partial, describe(r.plan)
+
+
+class TestOptimizer:
+    def test_all_strategies_agree(self):
+        plan = matmul_plan((4, 4), (4, 4), (8, 8), (8, 8))
+        RA, A = rand_rel(0, (4, 4), (8, 8))
+        RB, B = rand_rel(1, (4, 4), (8, 8))
+        want = np.asarray(A @ B)
+        for placements in [
+            {"A": Placement.replicated(), "B": Placement.replicated()},
+            {"A": Placement.partitioned((0,), S),
+             "B": Placement.partitioned((0,), S)},
+            {"A": Placement.partitioned((1,), S),
+             "B": Placement.partitioned((0,), S)},
+        ]:
+            r = optimize(plan, placements, S, SZ)
+            got = evaluate_ia(r.plan, {"A": RA, "B": RB})
+            np.testing.assert_allclose(np.asarray(to_tensor(got)), want,
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_optimizer_beats_default_compile(self):
+        plan = matmul_plan((2, 16), (16, 2), (4, 4), (4, 4))
+        placements = {"A": Placement.partitioned((1,), S),
+                      "B": Placement.partitioned((0,), S)}
+        default = compile_tra(plan, placements)
+        r = optimize(plan, placements, S, SZ)
+        assert r.cost < comm_cost(default, SZ)
+
+    def test_rmm_enumerated_on_2d_mesh(self):
+        """The §4.2.2 replication-based (3-D) matmul needs two mesh axes."""
+        plan = matmul_plan((4, 4), (4, 4), (8, 8), (8, 8))
+        axes = ("s0", "s1")
+        sizes = {"s0": 2, "s1": 2}
+        placements = {"A": Placement.partitioned((0,), ("s0",)),
+                      "B": Placement.partitioned((1,), ("s1",))}
+        r = optimize(plan, placements, axes, sizes)
+        # with operands already on distinct axes, the best plan should join
+        # them without any repartition (RMM) — communication only for the
+        # final reduction
+        RA, A = rand_rel(0, (4, 4), (8, 8))
+        RB, B = rand_rel(1, (4, 4), (8, 8))
+        got = evaluate_ia(r.plan, {"A": RA, "B": RB})
+        np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                                   np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+        assert "Shuf" not in describe(r.plan).split("LocalJoin")[1], \
+            describe(r.plan)
+
+    def test_filter_pushdown_reduces_cost(self):
+        """R1-6 + R2-2: pushing isEq below a join cuts the broadcast."""
+        rt = RelType((4, 4), (8, 8))
+        ta, tb = TraInput("A", rt), TraInput("B", rt)
+        j = TraJoin(ta, tb, (0, 1), (0, 1), get_kernel("matAdd"))
+        f = TraFilter(j, lambda k: k[0] == k[1], tag="isEq")
+        plan = TraTransform(f, get_kernel("diag"))
+        placements = {"A": Placement.partitioned((0,), S),
+                      "B": Placement.partitioned((0,), S)}
+        nofuse = optimize(plan, placements, S, SZ,
+                          try_logical_rewrites=False)
+        fused = optimize(plan, placements, S, SZ)
+        assert fused.cost <= nofuse.cost
+        RA, A = rand_rel(0, (4, 4), (8, 8))
+        RB, B = rand_rel(1, (4, 4), (8, 8))
+        want = evaluate_tra(plan, {"A": RA, "B": RB})
+        got = evaluate_ia(fused.plan, {"A": RA, "B": RB})
+        assert got.rtype == want.rtype
+        np.testing.assert_allclose(np.asarray(got.data),
+                                   np.asarray(want.data), rtol=1e-4, atol=1e-4)
+
+
+class TestLogicalRewrites:
+    def test_variants_preserve_semantics(self):
+        rt = RelType((4, 4), (8, 8))
+        ta, tb = TraInput("A", rt), TraInput("B", rt)
+        j = TraJoin(ta, tb, (0, 1), (0, 1), get_kernel("matAdd"))
+        f = TraFilter(j, lambda k: k[0] == k[1], tag="isEq")
+        plan = TraTransform(f, get_kernel("diag"))
+        RA, A = rand_rel(0, (4, 4), (8, 8))
+        RB, B = rand_rel(1, (4, 4), (8, 8))
+        want = evaluate_tra(plan, {"A": RA, "B": RB}).to_dict()
+        variants = logical_variants(plan)
+        assert len(variants) > 1
+        for v in variants:
+            got = evaluate_tra(v, {"A": RA, "B": RB}).to_dict()
+            assert set(got) == set(want)
+            for k in want:
+                np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-4)
+
+    def test_transform_agg_commute_variant(self):
+        """R1-4 with a distributive kernel (diag over matAdd)."""
+        rt = RelType((4, 2), (8, 8))
+        ta = TraInput("A", rt)
+        plan = TraTransform(TraAgg(ta, (0,), get_kernel("matAdd")),
+                            get_kernel("diag"))
+        variants = logical_variants(plan)
+        sigs = {str(type(v).__name__) for v in variants}
+        assert "TraAgg" in sigs  # the commuted form exists
+        RA, _ = rand_rel(0, (4, 2), (8, 8))
+        want = evaluate_tra(plan, {"A": RA}).to_dict()
+        for v in variants:
+            got = evaluate_tra(v, {"A": RA}).to_dict()
+            for k in want:
+                np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-4)
