@@ -1,0 +1,139 @@
+"""Fused Σ∘⋈ contraction vs the unfused join→agg pair.
+
+Measures, for the paper's matmul shapes (§5.1, scaled as in
+:mod:`benchmarks.matmul`) and the FFNN forward contraction (§5.3):
+
+* **peak live bytes** — XLA's compiled temp allocation
+  (``Compiled.memory_analysis().temp_size_in_bytes``), which for the
+  unfused pair contains the broadcasted I×K×J join grid (both operands
+  replicated over the cross-product keys) and for the fused node only the
+  blocked-contraction relayouts;
+* **wall-clock** — median-of-3 jitted execution;
+* whether the optimizer *selects* ``FusedJoinAgg`` automatically for the
+  ``agg(join(·, matMul), matAdd)`` pattern.
+
+Emits ``BENCH_fusion.json`` next to the repo root and asserts the headline
+regression guard: ≥5× lower peak temp bytes AND lower wall-clock for the
+fused path at the CPMM common-large-dim shape.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+SHAPES = {
+    # name: (I, K, J, sites)  — matching benchmarks.matmul.measured
+    "general": (2048, 2048, 2048, 8),
+    "common-large-dim": (512, 2048 * 8, 512, 8),
+    "two-large-dims": (4096, 512, 4096, 8),
+    # §5.3 FFNN forward a1 = X @ W1 at speech-100k scaled 16×
+    "ffnn-fwd": (4096, 512, 1024, 8),
+}
+
+GUARD_SHAPE = "common-large-dim"
+GUARD_TEMP_RATIO = 5.0
+
+
+def _time_it(fn, *args, iters: int = 3) -> float:
+    import jax
+    r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_shape(name: str, I: int, K: int, J: int, s: int) -> Dict:
+    import jax
+    import numpy as np
+
+    from repro.core import from_tensor, get_kernel
+    from repro.core import tra
+
+    mm, add = get_kernel("matMul"), get_kernel("matAdd")
+    ba, bb = (I // s, K // s), (K // s, J // s)
+    A = jax.random.normal(jax.random.PRNGKey(0), (I, K))
+    B = jax.random.normal(jax.random.PRNGKey(1), (K, J))
+    RA, RB = from_tensor(A, ba), from_tensor(B, bb)
+
+    def unfused(a, b):
+        ra = tra.TensorRelation(a, RA.rtype)
+        rb = tra.TensorRelation(b, RB.rtype)
+        return tra.agg(tra.join(ra, rb, (1,), (0,), mm), (0, 2), add).data
+
+    def fused(a, b):
+        ra = tra.TensorRelation(a, RA.rtype)
+        rb = tra.TensorRelation(b, RB.rtype)
+        return tra.fused_join_agg(ra, rb, (1,), (0,), mm, (0, 2), add).data
+
+    rec: Dict = {"shape": name, "I": I, "K": K, "J": J, "sites": s}
+    outs = {}
+    for tag, f in [("unfused", unfused), ("fused", fused)]:
+        jf = jax.jit(f)
+        compiled = jf.lower(RA.data, RB.data).compile()
+        ma = compiled.memory_analysis()
+        temp = int(ma.temp_size_in_bytes) if ma is not None else -1
+        rec[f"{tag}_temp_bytes"] = temp
+        rec[f"{tag}_ms"] = round(_time_it(jf, RA.data, RB.data) * 1e3, 2)
+        outs[tag] = np.asarray(jf(RA.data, RB.data))
+    np.testing.assert_allclose(outs["fused"], outs["unfused"],
+                               rtol=1e-3, atol=1e-3 * K ** 0.5)
+    if rec["unfused_temp_bytes"] > 0 and rec["fused_temp_bytes"] > 0:
+        rec["temp_ratio"] = round(
+            rec["unfused_temp_bytes"] / rec["fused_temp_bytes"], 2)
+    rec["speedup"] = round(rec["unfused_ms"] / rec["fused_ms"], 2)
+    return rec
+
+
+def optimizer_selects_fused() -> bool:
+    """agg(join(·, matMul), matAdd) must compile to FusedJoinAgg."""
+    from repro.core import (Placement, RelType, TraAgg, TraInput, TraJoin,
+                            describe, get_kernel, optimize)
+
+    S = ("sites",)
+    ta = TraInput("A", RelType((4, 4), (8, 8)))
+    tb = TraInput("B", RelType((4, 4), (8, 8)))
+    plan = TraAgg(TraJoin(ta, tb, (1,), (0,), get_kernel("matMul")),
+                  (0, 2), get_kernel("matAdd"))
+    r = optimize(plan, {"A": Placement.partitioned((1,), S),
+                        "B": Placement.partitioned((0,), S)},
+                 S, {"sites": 4})
+    return "FusedJoinAgg" in describe(r.plan)
+
+
+def run(mesh=None) -> List[str]:
+    recs = [bench_shape(n, *args) for n, args in SHAPES.items()]
+    sel = optimizer_selects_fused()
+    out = {"shapes": recs, "optimizer_selects_fused": sel,
+           "temp_metric": "Compiled.memory_analysis().temp_size_in_bytes"}
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_fusion.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+
+    lines = ["# fused Σ∘⋈ vs unfused join→agg (single device)"]
+    for r in recs:
+        lines.append(
+            f"{r['shape']:18s} temp {r['unfused_temp_bytes']/1e6:8.1f}→"
+            f"{r['fused_temp_bytes']/1e6:7.1f} MB "
+            f"(×{r.get('temp_ratio', float('nan')):.1f})  "
+            f"wall {r['unfused_ms']:7.1f}→{r['fused_ms']:6.1f} ms "
+            f"(×{r['speedup']:.1f})")
+    lines.append(f"optimizer selects FusedJoinAgg: {sel}")
+
+    guard = next(r for r in recs if r["shape"] == GUARD_SHAPE)
+    ok = (guard.get("temp_ratio", 0) >= GUARD_TEMP_RATIO
+          and guard["fused_ms"] < guard["unfused_ms"] and sel)
+    lines.append(f"regression guard (≥{GUARD_TEMP_RATIO}× temp, faster "
+                 f"wall-clock, auto-selected): {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise AssertionError(f"fusion regression guard failed: {guard}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

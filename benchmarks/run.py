@@ -18,12 +18,13 @@ def main(argv=None) -> int:
     ap.add_argument("--with-measured", action="store_true")
     args = ap.parse_args(argv)
 
-    from benchmarks import ffnn, matmul, nn_search, roofline
+    from benchmarks import ffnn, fusion, matmul, nn_search, roofline
 
     sections = [
         ("§5.1 matmul (Tables 3–4)", matmul.run),
         ("§5.2 nn-search (Tables 5–6)", nn_search.run),
         ("§5.3 ffnn (Tables 7–9)", ffnn.run),
+        ("fused Σ∘⋈ contraction (BENCH_fusion.json)", fusion.run),
         ("roofline (assignment g)", roofline.run),
     ]
     failures = 0
@@ -45,8 +46,8 @@ def main(argv=None) -> int:
             "'--xla_force_host_platform_device_count=8';"
             "import jax;"
             "from benchmarks import matmul;"
-            "mesh = jax.make_mesh((8,), ('sites',),"
-            " axis_types=(jax.sharding.AxisType.Auto,));"
+            "from repro.launch.mesh import make_mesh;"
+            "mesh = make_mesh((8,), ('sites',));"
             "print('\\n'.join(str(r) for r in matmul.measured(mesh)))")
         proc = subprocess.run([sys.executable, "-c", code],
                               capture_output=True, text=True, timeout=1200)

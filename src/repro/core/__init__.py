@@ -1,26 +1,28 @@
 """TRA/IA core — the paper's contribution as a composable JAX module."""
 from repro.core.kernels_registry import (Kernel, compose, get_kernel,
                                          register, registered_kernels)
-from repro.core.tra import (RelType, TensorRelation, from_tensor, to_tensor)
-from repro.core.plan import (Bcast, IAInput, LocalAgg, LocalConcat,
-                             LocalFilter, LocalJoin, LocalMap, LocalTile,
-                             Placement, Shuf, TraAgg, TraConcat, TraFilter,
-                             TraInput, TraJoin, TraReKey, TraTile,
+from repro.core.tra import (RelType, TensorRelation, can_fuse, from_tensor,
+                            fused_join_agg, to_tensor)
+from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, LocalAgg,
+                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
+                             LocalTile, Placement, Shuf, TraAgg, TraConcat,
+                             TraFilter, TraInput, TraJoin, TraReKey, TraTile,
                              TraTransform, check_valid, describe, infer)
 from repro.core.compile import compile_tra
 from repro.core.cost import (CostReport, HardwareModel, TPU_V5E, comm_cost,
                              cost_plan)
-from repro.core.optimize import OptimizeResult, optimize
+from repro.core.optimize import OptimizeResult, fuse_join_agg, optimize
 from repro.core.interp import evaluate_ia, evaluate_tra, jit_ia_plan
 
 __all__ = [
     "Kernel", "compose", "get_kernel", "register", "registered_kernels",
-    "RelType", "TensorRelation", "from_tensor", "to_tensor",
-    "Bcast", "IAInput", "LocalAgg", "LocalConcat", "LocalFilter",
-    "LocalJoin", "LocalMap", "LocalTile", "Placement", "Shuf",
+    "RelType", "TensorRelation", "can_fuse", "from_tensor",
+    "fused_join_agg", "to_tensor",
+    "Bcast", "FusedJoinAgg", "IAInput", "LocalAgg", "LocalConcat",
+    "LocalFilter", "LocalJoin", "LocalMap", "LocalTile", "Placement", "Shuf",
     "TraAgg", "TraConcat", "TraFilter", "TraInput", "TraJoin", "TraReKey",
     "TraTile", "TraTransform", "check_valid", "describe", "infer",
     "compile_tra", "CostReport", "HardwareModel", "TPU_V5E", "comm_cost",
-    "cost_plan", "OptimizeResult", "optimize", "evaluate_ia", "evaluate_tra",
-    "jit_ia_plan",
+    "cost_plan", "OptimizeResult", "fuse_join_agg", "optimize",
+    "evaluate_ia", "evaluate_tra", "jit_ia_plan",
 ]

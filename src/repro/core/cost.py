@@ -26,9 +26,10 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.plan import (Bcast, IAInput, IANode, LocalAgg, LocalConcat,
-                             LocalFilter, LocalJoin, LocalMap, LocalTile,
-                             Shuf, TypeInfo, infer, postorder)
+from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
+                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
+                             LocalTile, Shuf, TypeInfo, _join_types, infer,
+                             postorder)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,10 @@ class NodeCost:
     node: str
     comm_floats: int = 0
     flops: int = 0
+    # floats a node *materializes* beyond its inputs/output (an unfused
+    # LocalJoin builds the whole broadcasted grid; FusedJoinAgg streams it).
+    # Not part of the paper's §4.3 metric — used as a memory tiebreak.
+    tmp_floats: int = 0
 
 
 @dataclasses.dataclass
@@ -56,6 +61,7 @@ class CostReport:
     comm_floats: int
     flops: int
     per_node: List[NodeCost]
+    tmp_floats: int = 0
 
     def comm_seconds(self, hw: HardwareModel = TPU_V5E,
                      n_sites: int = 1) -> float:
@@ -178,12 +184,25 @@ def cost_plan(root: IANode, axis_sizes: Dict[str, int],
             lt, rt = cache[id(n.left)], cache[id(n.right)]
             nc.flops = ti.valid_tuples * n.kernel.flops(lt.rtype.bound,
                                                         rt.rtype.bound)
+            nc.tmp_floats = ti.valid_floats     # materialized join grid
         elif isinstance(n, LocalAgg):
             child = cache[id(n.child)]
             combines = max(child.valid_tuples - ti.valid_tuples, 0)
             if n.kernel.arity == 2:
                 nc.flops = combines * n.kernel.flops(child.rtype.bound,
                                                      child.rtype.bound)
+        elif isinstance(n, FusedJoinAgg):
+            lt, rt = cache[id(n.left)], cache[id(n.right)]
+            joint = _join_types(lt, rt, n.join_keys_l, n.join_keys_r,
+                                n.join_kernel)
+            nc.flops = joint.valid_tuples * n.join_kernel.flops(
+                lt.rtype.bound, rt.rtype.bound)
+            if n.agg_kernel.arity == 2:
+                combines = max(joint.valid_tuples - ti.valid_tuples, 0)
+                nc.flops += combines * n.agg_kernel.flops(joint.rtype.bound,
+                                                          joint.rtype.bound)
+            # streamed: output accumulator + one grid slice in flight
+            nc.tmp_floats = 2 * ti.valid_floats
         elif isinstance(n, LocalMap):
             if n.kernel.name != "idOp":
                 nc.flops = (cache[id(n.child)].valid_tuples
@@ -191,7 +210,8 @@ def cost_plan(root: IANode, axis_sizes: Dict[str, int],
         per_node.append(nc)
         total_comm += nc.comm_floats
         total_flops += nc.flops
-    return CostReport(total_comm, total_flops, per_node)
+    total_tmp = sum(nc.tmp_floats for nc in per_node)
+    return CostReport(total_comm, total_flops, per_node, total_tmp)
 
 
 def comm_cost(root: IANode, axis_sizes: Dict[str, int],

@@ -23,44 +23,68 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import tra
-from repro.core.plan import (Bcast, IAInput, IANode, LocalAgg, LocalConcat,
-                             LocalFilter, LocalJoin, LocalMap, LocalTile,
-                             Placement, Shuf, TraAgg, TraConcat, TraFilter,
-                             TraInput, TraJoin, TraNode, TraReKey, TraTile,
-                             TraTransform, infer)
+from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
+                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
+                             LocalTile, Placement, Shuf, TraAgg, TraConcat,
+                             TraFilter, TraInput, TraJoin, TraNode, TraReKey,
+                             TraTile, TraTransform, children, infer,
+                             postorder)
 from repro.core.tra import TensorRelation
 
-
 def evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
-                 _cache: Optional[dict] = None) -> TensorRelation:
+                 _cache: Optional[dict] = None,
+                 fuse: bool = True) -> TensorRelation:
+    """Walk a logical plan with the dense eager ops.
+
+    With ``fuse=True`` (default) every ``TraAgg(TraJoin(...))`` pair whose
+    kernels admit it executes through :func:`tra.fused_join_agg` — the
+    Σ∘⋈ contraction — instead of materializing the join grid.  Joins with
+    more than one consumer are exempt (they are computed once and cached).
+    Pass ``fuse=False`` to force the unfused pair (the correctness oracle).
+    """
     cache = _cache if _cache is not None else {}
-    if id(node) in cache:
-        return cache[id(node)]
+    shared: set = set()
+    if fuse:
+        counts: Dict[int, int] = {}
+        for n in postorder(node):
+            for c in children(n):
+                counts[id(c)] = counts.get(id(c), 0) + 1
+        shared = {i for i, k in counts.items() if k > 1}
 
     def rec(n):
-        return evaluate_tra(n, env, cache)
+        if id(n) in cache:
+            return cache[id(n)]
+        if isinstance(n, TraInput):
+            out = env[n.name]
+        elif isinstance(n, TraJoin):
+            out = tra.join(rec(n.left), rec(n.right),
+                           n.join_keys_l, n.join_keys_r, n.kernel)
+        elif isinstance(n, TraAgg):
+            c = n.child
+            if fuse and isinstance(c, TraJoin) and id(c) not in cache \
+                    and id(c) not in shared \
+                    and tra.can_fuse(c.kernel, n.kernel):
+                out = tra.fused_join_agg(
+                    rec(c.left), rec(c.right), c.join_keys_l,
+                    c.join_keys_r, c.kernel, n.group_by, n.kernel)
+            else:
+                out = tra.agg(rec(n.child), n.group_by, n.kernel)
+        elif isinstance(n, TraReKey):
+            out = tra.rekey(rec(n.child), n.key_func)
+        elif isinstance(n, TraFilter):
+            out = tra.filt(rec(n.child), n.bool_func)
+        elif isinstance(n, TraTransform):
+            out = tra.transform(rec(n.child), n.kernel)
+        elif isinstance(n, TraTile):
+            out = tra.tile(rec(n.child), n.tile_dim, n.tile_size)
+        elif isinstance(n, TraConcat):
+            out = tra.concat(rec(n.child), n.key_dim, n.array_dim)
+        else:
+            raise TypeError(type(n))
+        cache[id(n)] = out
+        return out
 
-    if isinstance(node, TraInput):
-        out = env[node.name]
-    elif isinstance(node, TraJoin):
-        out = tra.join(rec(node.left), rec(node.right),
-                       node.join_keys_l, node.join_keys_r, node.kernel)
-    elif isinstance(node, TraAgg):
-        out = tra.agg(rec(node.child), node.group_by, node.kernel)
-    elif isinstance(node, TraReKey):
-        out = tra.rekey(rec(node.child), node.key_func)
-    elif isinstance(node, TraFilter):
-        out = tra.filt(rec(node.child), node.bool_func)
-    elif isinstance(node, TraTransform):
-        out = tra.transform(rec(node.child), node.kernel)
-    elif isinstance(node, TraTile):
-        out = tra.tile(rec(node.child), node.tile_dim, node.tile_size)
-    elif isinstance(node, TraConcat):
-        out = tra.concat(rec(node.child), node.key_dim, node.array_dim)
-    else:
-        raise TypeError(type(node))
-    cache[id(node)] = out
-    return out
+    return rec(node)
 
 
 def _pspec_for(placement: Optional[Placement], rtype) -> P:
@@ -120,6 +144,13 @@ def evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
         out = constrain(out, ti.placement)
     elif isinstance(node, LocalAgg):
         out = tra.agg(rec(node.child), node.group_by, node.kernel)
+        ti = infer(node)
+        out = constrain(out, ti.placement)
+    elif isinstance(node, FusedJoinAgg):
+        out = tra.fused_join_agg(rec(node.left), rec(node.right),
+                                 node.join_keys_l, node.join_keys_r,
+                                 node.join_kernel, node.group_by,
+                                 node.agg_kernel)
         ti = infer(node)
         out = constrain(out, ti.placement)
     elif isinstance(node, LocalFilter):

@@ -18,6 +18,13 @@ Two stages, mirroring the paper's two rule classes:
 
 Costs are the paper's exact float-movement metric via
 :func:`repro.core.cost.comm_cost` — no estimation anywhere.
+
+Beyond the paper, aggregation entries whose child is a join also enumerate
+the fused Σ∘⋈ node (:class:`repro.core.plan.FusedJoinAgg`, direct and
+two-phase).  Fusion never changes the float-movement metric, so selection
+uses the cost model's ``tmp_floats`` (intermediate materialization) as a
+tiebreak — fused plans win at equal comm cost.  :func:`fuse_join_agg`
+applies the same collapse as a rewrite over existing physical plans.
 """
 from __future__ import annotations
 
@@ -26,12 +33,14 @@ import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import kernels_registry as kr
-from repro.core.cost import comm_cost
-from repro.core.plan import (Bcast, IAInput, IANode, LocalAgg, LocalConcat,
-                             LocalFilter, LocalJoin, LocalMap, LocalTile,
-                             Placement, Shuf, TraAgg, TraConcat, TraFilter,
-                             TraInput, TraJoin, TraNode, TraReKey, TraTile,
-                             TraTransform, TypeInfo, check_valid, infer)
+from repro.core.cost import cost_plan
+from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
+                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
+                             LocalTile, Placement, Shuf, TraAgg, TraConcat,
+                             TraFilter, TraInput, TraJoin, TraNode, TraReKey,
+                             TraTile, TraTransform, TypeInfo, check_valid,
+                             children, infer)
+from repro.core.tra import can_fuse
 
 PlacementSig = Tuple
 
@@ -200,6 +209,10 @@ class PlanEntry:
     cost: int
     plan: IANode
     placement: Optional[Placement]
+    # intermediate-materialization floats: a *tiebreak* under equal comm
+    # cost, so fused Σ∘⋈ plans beat grid-materializing ones without ever
+    # perturbing the paper's float-movement metric.
+    tmp: int = 0
 
 
 def interesting_placements(key_arity: int,
@@ -231,7 +244,8 @@ class Optimizer:
                 ti = cache[id(n)]
                 # every local op must satisfy its placement preconditions
                 # NOW — a later SHUF cannot repair locally-wrong results
-                if isinstance(n, (LocalJoin, LocalAgg, LocalConcat)) \
+                if isinstance(n, (LocalJoin, LocalAgg, LocalConcat,
+                                  FusedJoinAgg)) \
                         and ti.placement is None:
                     return None
                 # partitioned frontier dims must divide their axis sizes
@@ -244,8 +258,9 @@ class Optimizer:
                             return None
         except (ValueError, TypeError):
             return None
-        cost = comm_cost(plan, self.axis_sizes, self.accounting)
-        return PlanEntry(cost, plan, info.placement)
+        rep = cost_plan(plan, self.axis_sizes, self.accounting)
+        return PlanEntry(rep.comm_floats, plan, info.placement,
+                         rep.tmp_floats)
 
     def _add(self, table: Dict[PlacementSig, PlanEntry],
              entry: Optional[PlanEntry]) -> None:
@@ -253,7 +268,7 @@ class Optimizer:
             return
         sig = placement_sig(entry.placement)
         cur = table.get(sig)
-        if cur is None or entry.cost < cur.cost:
+        if cur is None or (entry.cost, entry.tmp) < (cur.cost, cur.tmp):
             table[sig] = entry
 
     def _closure(self, table: Dict[PlacementSig, PlanEntry],
@@ -315,6 +330,33 @@ class Optimizer:
                         else:
                             self._add(table, self._entry(
                                 Shuf(partial, p.dims, p.axes)))
+            # Σ∘⋈ contraction: when the agg consumes a join directly, also
+            # enumerate the fused node over the join operands' tables —
+            # same comm cost as the LocalAgg∘LocalJoin pair but no
+            # materialized grid, so the tmp tiebreak selects it.
+            if isinstance(node.child, TraJoin) \
+                    and can_fuse(node.child.kernel, node.kernel):
+                j = node.child
+                lt = self.tables(j.left, input_placements, memo)
+                rt_ = self.tables(j.right, input_placements, memo)
+                out_arity = len(node.group_by)
+                for le in lt.values():
+                    for re_ in rt_.values():
+                        self._add(table, self._entry(FusedJoinAgg(
+                            le.plan, re_.plan, j.join_keys_l, j.join_keys_r,
+                            j.kernel, node.group_by, node.kernel)))
+                        partial = FusedJoinAgg(
+                            le.plan, re_.plan, j.join_keys_l, j.join_keys_r,
+                            j.kernel, node.group_by, node.kernel,
+                            partial=True)
+                        for p in interesting_placements(out_arity,
+                                                        self.site_axes):
+                            if p.is_replicated:
+                                self._add(table,
+                                          self._entry(Bcast(partial)))
+                            else:
+                                self._add(table, self._entry(
+                                    Shuf(partial, p.dims, p.axes)))
 
         elif isinstance(node, TraTransform):
             ct = self.tables(node.child, input_placements, memo)
@@ -395,7 +437,8 @@ def optimize(root: TraNode,
                     != placement_sig(target):
                 continue
             log.append((f"{sig}", entry.cost))
-            if best is None or entry.cost < best.cost:
+            if best is None or (entry.cost, entry.tmp) < (best.cost,
+                                                          best.tmp):
                 best = entry
     if best is None:
         raise ValueError("no valid physical plan found")
@@ -403,3 +446,112 @@ def optimize(root: TraNode,
     log.sort(key=lambda x: x[1])
     return OptimizeResult(best.plan, best.cost, best.placement, log,
                           len(variants))
+
+
+# ==========================================================================
+# Physical-plan fusion rewrite (for hand-built / Table-1 default plans)
+# ==========================================================================
+
+def _rebuild_ia(node: IANode, kids: Sequence[IANode]) -> IANode:
+    if isinstance(node, IAInput):
+        return node
+    if isinstance(node, LocalJoin):
+        return LocalJoin(kids[0], kids[1], node.join_keys_l,
+                         node.join_keys_r, node.kernel)
+    if isinstance(node, FusedJoinAgg):
+        return FusedJoinAgg(kids[0], kids[1], node.join_keys_l,
+                            node.join_keys_r, node.join_kernel,
+                            node.group_by, node.agg_kernel, node.partial)
+    if isinstance(node, Bcast):
+        return Bcast(kids[0])
+    if isinstance(node, Shuf):
+        return Shuf(kids[0], node.part_dims, node.axes)
+    if isinstance(node, LocalAgg):
+        return LocalAgg(kids[0], node.group_by, node.kernel, node.partial)
+    if isinstance(node, LocalFilter):
+        return LocalFilter(kids[0], node.bool_func, node.tag)
+    if isinstance(node, LocalMap):
+        return LocalMap(kids[0], node.key_func, node.kernel, node.tag)
+    if isinstance(node, LocalTile):
+        return LocalTile(kids[0], node.tile_dim, node.tile_size)
+    if isinstance(node, LocalConcat):
+        return LocalConcat(kids[0], node.key_dim, node.array_dim)
+    raise TypeError(type(node))
+
+
+def _valid_same_placement(cand: IANode, original: IANode) -> bool:
+    """cand typechecks, every local op has a placement, and the subtree's
+    final placement signature matches the original's (so parents above the
+    rewrite site stay valid).
+
+    Deliberately NOT plan.check_valid: that also rejects roots whose
+    placement still carries pending duplicates, but a dup-carrying
+    *subtree* (a partial FusedJoinAgg awaiting its Shuf/Bcast) is legal
+    mid-plan — the signature comparison against the original covers it.
+    """
+    from repro.core.plan import postorder as _post
+    try:
+        cache: Dict[int, TypeInfo] = {}
+        info = infer(cand, cache=cache)
+        for n in _post(cand):
+            if isinstance(n, (LocalJoin, LocalAgg, LocalConcat,
+                              FusedJoinAgg)) \
+                    and cache[id(n)].placement is None:
+                return False
+        orig = infer(original)
+    except (ValueError, TypeError):
+        return False
+    return placement_sig(info.placement) == placement_sig(orig.placement)
+
+
+def fuse_join_agg(root: IANode) -> IANode:
+    """Collapse ``LocalAgg(Shuf?(LocalJoin(L, R)))`` into the fused Σ∘⋈
+    node wherever the agg kernel is an associative reducer of the join
+    kernel's output.
+
+    With an interposed ``Shuf`` the rewrite produces the *two-phase* form
+    ``Shuf(FusedJoinAgg(..., partial=True))`` — the shuffle of the small
+    aggregated output (a reduce-scatter of the pending partials) replaces
+    the shuffle of the whole join grid.  Candidates are only accepted when
+    they typecheck and land on the same output placement as the original
+    subtree, so the rewrite is always plan-validity-preserving.
+    """
+    cache: Dict[int, IANode] = {}
+
+    def rec(n: IANode) -> IANode:
+        if id(n) in cache:
+            return cache[id(n)]
+        kids = [rec(c) for c in children(n)]
+        out = _rebuild_ia(n, kids)
+        if isinstance(out, LocalAgg):
+            c = out.child
+            if isinstance(c, LocalJoin) and can_fuse(c.kernel, out.kernel):
+                cand = FusedJoinAgg(c.left, c.right, c.join_keys_l,
+                                    c.join_keys_r, c.kernel, out.group_by,
+                                    out.kernel, partial=out.partial)
+                if _valid_same_placement(cand, out):
+                    out = cand
+            elif (isinstance(c, Shuf) and isinstance(c.child, LocalJoin)
+                    and not out.partial
+                    and can_fuse(c.child.kernel, out.kernel)
+                    and set(c.part_dims) <= set(out.group_by)):
+                j = c.child
+                odims = tuple(out.group_by.index(d) for d in c.part_dims)
+                # partial=True leaves pending duplicates whose resolution
+                # (psum/psum_scatter in shard_map mode) only exists for
+                # additive reducers — other kernels fuse without the
+                # two-phase split
+                variants = (True, False) if out.kernel.name == "matAdd" \
+                    else (False,)
+                for partial in variants:
+                    fused = FusedJoinAgg(
+                        j.left, j.right, j.join_keys_l, j.join_keys_r,
+                        j.kernel, out.group_by, out.kernel, partial=partial)
+                    cand = Shuf(fused, odims, c.axes)
+                    if _valid_same_placement(cand, out):
+                        out = cand
+                        break
+        cache[id(n)] = out
+        return out
+
+    return rec(root)

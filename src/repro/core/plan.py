@@ -202,6 +202,28 @@ class LocalAgg(IANode):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class FusedJoinAgg(IANode):
+    """Σᴸ∘⋈ᴸ as one physical node — the paper's Σ∘⋈ contraction pattern.
+
+    Semantically ``LocalAgg(LocalJoin(left, right, ...), group_by, ...)``
+    (``group_by`` indexes the join's output key space) but lowered without
+    materializing the broadcasted join grid: a single blocked contraction
+    for (matMul, matAdd)-shaped kernel pairs, a streamed reduction
+    otherwise.  ``partial=True`` is the R2-5 partial phase, exactly as on
+    :class:`LocalAgg`.
+    """
+
+    left: IANode
+    right: IANode
+    join_keys_l: Tuple[int, ...]
+    join_keys_r: Tuple[int, ...]
+    join_kernel: Kernel
+    group_by: Tuple[int, ...]
+    agg_kernel: Kernel
+    partial: bool = False
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class LocalFilter(IANode):
     child: IANode
     bool_func: Callable
@@ -231,7 +253,7 @@ class LocalConcat(IANode):
 
 
 def children(node) -> Tuple:
-    if isinstance(node, (TraJoin, LocalJoin)):
+    if isinstance(node, (TraJoin, LocalJoin, FusedJoinAgg)):
         return (node.left, node.right)
     if isinstance(node, (TraInput, IAInput)):
         return ()
@@ -268,6 +290,12 @@ def describe(node, indent: int = 0) -> str:
     elif isinstance(node, (TraAgg, LocalAgg)):
         extra = f"(gb={list(node.group_by)}, {node.kernel.name})"
         if isinstance(node, LocalAgg) and node.partial:
+            extra += "[partial]"
+    elif isinstance(node, FusedJoinAgg):
+        extra = (f"(LocalJoin(L{list(node.join_keys_l)}"
+                 f"=R{list(node.join_keys_r)}, {node.join_kernel.name}) → "
+                 f"gb={list(node.group_by)}, {node.agg_kernel.name})")
+        if node.partial:
             extra += "[partial]"
     elif isinstance(node, Shuf):
         extra = f"(dims={list(node.part_dims)}→{list(node.axes)})"
@@ -352,6 +380,20 @@ def _join_types(lt: TypeInfo, rt: TypeInfo, jkl, jkr, kernel) -> TypeInfo:
     return TypeInfo(RelType(key_shape, bound, lt.rtype.dtype), mask, None)
 
 
+def _agg_types(ct: TypeInfo, group_by: Tuple[int, ...]) -> TypeInfo:
+    ks = tuple(ct.rtype.key_shape[d] for d in group_by)
+    mask = None
+    if ct.mask is not None:
+        k = ct.rtype.key_arity
+        perm = list(group_by) + [d for d in range(k) if d not in group_by]
+        mt = np.moveaxis(ct.mask, perm, list(range(k)))
+        red = tuple(range(len(group_by), k))
+        mask = np.any(mt, axis=red) if red else mt
+        if np.all(mask):
+            mask = None
+    return TypeInfo(RelType(ks, ct.rtype.bound, ct.rtype.dtype), mask, None)
+
+
 def infer(node, env: Optional[Dict[str, TypeInfo]] = None,
           cache: Optional[Dict[int, TypeInfo]] = None) -> TypeInfo:
     """Exact static inference of (type, mask, placement) for any plan node."""
@@ -375,20 +417,19 @@ def infer(node, env: Optional[Dict[str, TypeInfo]] = None,
             t.placement = _local_join_placement(node, lt, rt)
     elif isinstance(node, (TraAgg, LocalAgg)):
         ct = rec(node.child)
-        ks = tuple(ct.rtype.key_shape[d] for d in node.group_by)
-        mask = None
-        if ct.mask is not None:
-            k = ct.rtype.key_arity
-            perm = list(node.group_by) + [d for d in range(k)
-                                          if d not in node.group_by]
-            mt = np.moveaxis(ct.mask, perm, list(range(k)))
-            red = tuple(range(len(node.group_by), k))
-            mask = np.any(mt, axis=red) if red else mt
-            if np.all(mask):
-                mask = None
-        t = TypeInfo(RelType(ks, ct.rtype.bound, ct.rtype.dtype), mask, None)
+        t = _agg_types(ct, tuple(node.group_by))
         if isinstance(node, LocalAgg):
-            t.placement = _local_agg_placement(node, ct)
+            t.placement = _agg_placement(ct, node.group_by, node.kernel,
+                                         node.partial)
+    elif isinstance(node, FusedJoinAgg):
+        lt, rt = rec(node.left), rec(node.right)
+        jt = _join_types(lt, rt, node.join_keys_l, node.join_keys_r,
+                         node.join_kernel)
+        jt.placement = _local_join_placement(node, lt, rt)
+        t = _agg_types(jt, tuple(node.group_by))
+        if jt.placement is not None:
+            t.placement = _agg_placement(jt, node.group_by, node.agg_kernel,
+                                         node.partial)
     elif isinstance(node, Bcast):
         ct = rec(node.child)
         t = TypeInfo(ct.rtype, ct.mask, Placement.replicated())
@@ -528,7 +569,7 @@ def _rekey_info(ct: TypeInfo, key_func) -> TypeInfo:
 
 # --- placement rules (validity of local ops, paper §3) --------------------
 
-def _local_join_placement(node: LocalJoin, lt: TypeInfo,
+def _local_join_placement(node, lt: TypeInfo,
                           rt: TypeInfo) -> Optional[Placement]:
     """Per-mesh-axis validity of a local join.
 
@@ -589,7 +630,10 @@ def _local_join_placement(node: LocalJoin, lt: TypeInfo,
     return Placement.partitioned(dims_out, axes_out)
 
 
-def _local_agg_placement(node: LocalAgg, ct: TypeInfo) -> Optional[Placement]:
+def _agg_placement(ct: TypeInfo, group_by: Tuple[int, ...], kernel: Kernel,
+                   partial: bool) -> Optional[Placement]:
+    """Shared by :class:`LocalAgg` and the agg half of :class:`FusedJoinAgg`
+    (``ct`` is then the virtual join result)."""
     p = ct.placement
     if p is None:
         return None
@@ -597,24 +641,24 @@ def _local_agg_placement(node: LocalAgg, ct: TypeInfo) -> Optional[Placement]:
         return None  # must SHUF (reduce-scatter) / BCAST (all-reduce) first
     if p.is_replicated:
         return Placement.replicated()
-    if node.partial:
+    if partial:
         # Partial phase of R2-5: surviving group dims keep their axes; axes
         # on reduced dims become pending-duplicate axes.
         dims, axes, dup = [], [], []
         for d, ax in zip(p.dims, p.axes):
-            if d in node.group_by:
-                dims.append(node.group_by.index(d))
+            if d in group_by:
+                dims.append(group_by.index(d))
                 axes.append(ax)
             else:
                 dup.append(ax)
         if not dup:
             return None  # nothing partial about it — use partial=False
         return Placement.partitioned(dims, axes, dup_axes=dup,
-                                     dup_kernel=node.kernel.name)
+                                     dup_kernel=kernel.name)
     # full equivalence requires part dims ⊆ groupByKeys (rule R2-4)
-    if not set(p.dims) <= set(node.group_by):
+    if not set(p.dims) <= set(group_by):
         return None
-    dims = [node.group_by.index(d) for d in p.dims]
+    dims = [group_by.index(d) for d in p.dims]
     return Placement.partitioned(dims, p.axes)
 
 
@@ -638,7 +682,7 @@ def check_valid(root: IANode) -> TypeInfo:
     info = infer(root, cache=cache)
     for n in postorder(root):
         ti = cache[id(n)]
-        if isinstance(n, (LocalJoin, LocalAgg, LocalConcat)) \
+        if isinstance(n, (LocalJoin, LocalAgg, LocalConcat, FusedJoinAgg)) \
                 and ti.placement is None:
             raise ValueError(
                 f"invalid physical plan at {type(n).__name__}: "

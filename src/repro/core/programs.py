@@ -13,9 +13,10 @@ import jax.numpy as jnp
 
 from repro.core.kernels_registry import (Kernel, get_kernel, make_scale_mul,
                                          make_to_val_idx, register)
-from repro.core.plan import (Bcast, IAInput, IANode, LocalAgg, LocalJoin,
-                             Placement, Shuf, TraAgg, TraConcat, TraInput,
-                             TraJoin, TraNode, TraReKey, TraTransform)
+from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
+                             LocalJoin, Placement, Shuf, TraAgg, TraConcat,
+                             TraInput, TraJoin, TraNode, TraReKey,
+                             TraTransform)
 from repro.core.tra import RelType
 
 S = ("sites",)
@@ -60,6 +61,27 @@ def cpmm_two_phase_plan(fa, fb, ba, bbnd) -> IANode:
     j = LocalJoin(a, b, (1,), (0,), get_kernel("matMul"))
     partial = LocalAgg(j, (0, 2), get_kernel("matAdd"), partial=True)
     return Shuf(partial, (0,), S)
+
+
+def bmm_fused_plan(fa, fb, ba, bbnd) -> IANode:
+    """BMM with the Σ∘⋈ pair collapsed into one FusedJoinAgg contraction —
+    identical comm cost to :func:`bmm_plan`, no materialized join grid."""
+    a = IAInput("A", RelType(fa, ba), Placement.partitioned((0,), S))
+    b = IAInput("B", RelType(fb, bbnd), Placement.partitioned((0,), S))
+    return FusedJoinAgg(Bcast(a), b, (1,), (0,), get_kernel("matMul"),
+                        (0, 2), get_kernel("matAdd"))
+
+
+def cpmm_fused_plan(fa, fb, ba, bbnd) -> IANode:
+    """CPMM as the fused two-phase contraction: each site contracts its
+    key window in one blocked matmul (partial FusedJoinAgg), then a single
+    SHUF reduce-scatters the pending partials — the plan the paper's
+    Σ∘⋈-as-contraction claim describes."""
+    a = IAInput("A", RelType(fa, ba), Placement.partitioned((1,), S))
+    b = IAInput("B", RelType(fb, bbnd), Placement.partitioned((0,), S))
+    fused = FusedJoinAgg(a, b, (1,), (0,), get_kernel("matMul"),
+                         (0, 2), get_kernel("matAdd"), partial=True)
+    return Shuf(fused, (0,), S)
 
 
 def rmm_cost(fa, fb, ba, bbnd, sites: int, accounting: str = "paper") -> int:

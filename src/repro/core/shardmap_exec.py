@@ -25,10 +25,16 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import tra
 from repro.core.interp import _pspec_for
-from repro.core.plan import (Bcast, IAInput, IANode, LocalAgg, LocalConcat,
-                             LocalFilter, LocalJoin, LocalMap, LocalTile,
-                             Placement, Shuf, TypeInfo, infer, postorder)
+from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
+                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
+                             LocalTile, Placement, Shuf, TypeInfo, infer,
+                             postorder)
 from repro.core.tra import RelType, TensorRelation
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:                                      # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def _local_rtype(info: TypeInfo, mesh: Mesh) -> RelType:
@@ -45,8 +51,8 @@ def _local_rtype(info: TypeInfo, mesh: Mesh) -> RelType:
     return RelType(tuple(ks), info.rtype.bound, info.rtype.dtype)
 
 
-def _resolve_dups(x: jax.Array, src: Placement,
-                  tgt: Optional[Placement]) -> Tuple[jax.Array, Placement]:
+def _resolve_dups(x: jax.Array, src: Placement, tgt: Optional[Placement],
+                  mesh: Mesh) -> Tuple[jax.Array, Placement]:
     """Reduce pending duplicate-key partials (R2-5's second phase)."""
     if not src.dup_axes:
         return x, src
@@ -59,7 +65,7 @@ def _resolve_dups(x: jax.Array, src: Placement,
     if tgt is not None and tgt.kind == "partitioned":
         for d, ax in zip(tgt.dims, tgt.axes):
             if ax in remaining_dups:
-                if x.shape[d] % jax.lax.axis_size(ax) == 0:
+                if x.shape[d] % mesh.shape[ax] == 0:
                     # reduce-scatter: sum partials over ax, scatter along d
                     x = jax.lax.psum_scatter(x, ax, scatter_dimension=d,
                                              tiled=True)
@@ -78,7 +84,7 @@ def _resolve_dups(x: jax.Array, src: Placement,
 def _move(x: jax.Array, src: Placement, tgt: Placement,
           mesh: Mesh) -> jax.Array:
     """Repartition local block ``x`` from ``src`` to ``tgt`` placement."""
-    x, src = _resolve_dups(x, src, tgt)
+    x, src = _resolve_dups(x, src, tgt, mesh)
     src_map = {ax: d for d, ax in zip(src.dims, src.axes)}
     tgt_map = {} if tgt.kind == "replicated" \
         else {ax: d for d, ax in zip(tgt.dims, tgt.axes)}
@@ -147,6 +153,23 @@ def execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
                     cx.shape[:ct.rtype.key_arity], ct.rtype.bound,
                     ct.rtype.dtype))
                 out = tra.agg(crel, node.group_by, node.kernel).data
+            elif isinstance(node, FusedJoinAgg):
+                # Σᴸ∘⋈ᴸ in one step over the local key windows.  For the
+                # partial (R2-5) phase the per-site result carries pending
+                # duplicates that the next Shuf/Bcast resolves through
+                # psum_scatter / psum exactly as for LocalAgg.
+                lt, rt = cache[id(node.left)], cache[id(node.right)]
+                lx, rx = rec(node.left), rec(node.right)
+                lx, rx = _align_join_windows(node, lt, rt, lx, rx, mesh)
+                lrel = TensorRelation(lx, RelType(
+                    lx.shape[:lt.rtype.key_arity], lt.rtype.bound,
+                    lt.rtype.dtype))
+                rrel = TensorRelation(rx, RelType(
+                    rx.shape[:rt.rtype.key_arity], rt.rtype.bound,
+                    rt.rtype.dtype))
+                out = tra.fused_join_agg(
+                    lrel, rrel, node.join_keys_l, node.join_keys_r,
+                    node.join_kernel, node.group_by, node.agg_kernel).data
             elif isinstance(node, LocalMap):
                 ct = cache[id(node.child)]
                 cx = rec(node.child)
@@ -203,7 +226,7 @@ def execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
         # resolve any trailing duplicate state so the output is clean
         p = out_info.placement
         if p is not None and p.dup_axes:
-            res, _ = _resolve_dups(res, p, None)
+            res, _ = _resolve_dups(res, p, None, mesh)
         return res
 
     in_specs = tuple(_pspec_for(by_name[n].placement, by_name[n].rtype)
@@ -212,14 +235,14 @@ def execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
     if out_p is not None and out_p.dup_axes:
         out_p = Placement.partitioned(out_p.dims, out_p.axes)
     out_spec = _pspec_for(out_p, out_info.rtype)
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_spec)
+    fn = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_spec)
     arrays = [env[n].data for n in names]
     out = fn(*arrays)
     return TensorRelation(out, out_info.rtype)
 
 
-def _align_join_windows(node: LocalJoin, lt: TypeInfo, rt: TypeInfo,
+def _align_join_windows(node, lt: TypeInfo, rt: TypeInfo,
                         lx: jax.Array, rx: jax.Array, mesh: Mesh):
     """Slice a replicated side down to the partitioned side's key window.
 

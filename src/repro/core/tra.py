@@ -186,15 +186,33 @@ def to_tensor(rel: TensorRelation,
 # TRA operations (eager, dense)
 # ==========================================================================
 
-def join(left: TensorRelation, right: TensorRelation,
-         join_keys_l: Sequence[int], join_keys_r: Sequence[int],
-         kernel: Kernel) -> TensorRelation:
-    """⋈_(joinKeysL, joinKeysR, projOp)(L, R).
+@dataclasses.dataclass
+class _JoinGeometry:
+    """Key alignment shared by ``join`` and ``fused_join_agg``.
 
-    Output keys: all left keys (original order) then right keys with the
-    joined dims dropped — the paper's natural-join convention.
+    ``ldata`` is the frontier-sliced left payload (shape ``f_out_l ++
+    left.bound``); ``rdata_t`` is the right payload with its key axes moved
+    into output-axis order (shape = covered-axis sizes ++ right.bound).
+    ``r_shape`` is the singleton-expanded right key shape over the full
+    output key grid.  Nothing here is broadcast yet — the grid is only
+    materialized by ``join``, never by the fused path.
     """
-    jkl, jkr = tuple(join_keys_l), tuple(join_keys_r)
+
+    kl: int
+    kr: int
+    k_out: int
+    f_out_l: Tuple[int, ...]
+    out_key_shape: Tuple[int, ...]
+    covered: Tuple[int, ...]          # output key axes the right side covers
+    r_shape: Tuple[int, ...]
+    ldata: jax.Array
+    rdata_t: jax.Array
+    lmask: Optional[np.ndarray]
+    rmask_t: Optional[np.ndarray]
+
+
+def _join_align(left: TensorRelation, right: TensorRelation,
+                jkl: Tuple[int, ...], jkr: Tuple[int, ...]) -> _JoinGeometry:
     if len(jkl) != len(jkr):
         raise ValueError("join key lists must have equal length")
     kl = left.rtype.key_arity
@@ -232,8 +250,8 @@ def join(left: TensorRelation, right: TensorRelation,
                            [order.index(d) for d in range(kr)])
     rmask_t = None if rmask is None else np.moveaxis(
         rmask, list(range(kr)), [order.index(d) for d in range(kr)])
-    # insert singleton axes for output key axes not covered by the right
-    covered = sorted(out_axis_of_rdim.values())
+    # singleton axes for output key axes not covered by the right
+    covered = tuple(sorted(out_axis_of_rdim.values()))
     r_shape = []
     ci = 0
     for ax in range(k_out):
@@ -242,22 +260,37 @@ def join(left: TensorRelation, right: TensorRelation,
             ci += 1
         else:
             r_shape.append(1)
-    rdata_b = rdata_t.reshape(tuple(r_shape) + tuple(right.bound))
-    rmask_b = None if rmask_t is None else rmask_t.reshape(tuple(r_shape))
+    return _JoinGeometry(kl, kr, k_out, tuple(f_out_l), out_key_shape,
+                         covered, tuple(r_shape), ldata, rdata_t,
+                         lmask, rmask_t)
+
+
+def join(left: TensorRelation, right: TensorRelation,
+         join_keys_l: Sequence[int], join_keys_r: Sequence[int],
+         kernel: Kernel) -> TensorRelation:
+    """⋈_(joinKeysL, joinKeysR, projOp)(L, R).
+
+    Output keys: all left keys (original order) then right keys with the
+    joined dims dropped — the paper's natural-join convention.
+    """
+    jkl, jkr = tuple(join_keys_l), tuple(join_keys_r)
+    g = _join_align(left, right, jkl, jkr)
+    rdata_b = g.rdata_t.reshape(g.r_shape + tuple(right.bound))
+    rmask_b = None if g.rmask_t is None else g.rmask_t.reshape(g.r_shape)
 
     # left occupies the first kl output axes
-    ldata_b = ldata.reshape(tuple(f_out_l) + (1,) * (k_out - kl)
-                            + tuple(left.bound))
+    ldata_b = g.ldata.reshape(g.f_out_l + (1,) * (g.k_out - g.kl)
+                              + tuple(left.bound))
 
-    lb = jnp.broadcast_to(ldata_b, out_key_shape + tuple(left.bound))
-    rb = jnp.broadcast_to(rdata_b, out_key_shape + tuple(right.bound))
+    lb = jnp.broadcast_to(ldata_b, g.out_key_shape + tuple(left.bound))
+    rb = jnp.broadcast_to(rdata_b, g.out_key_shape + tuple(right.bound))
     out = kernel.apply(lb, rb)
 
     out_bound = kernel.out_bound(left.bound, right.bound)
-    rt = RelType(out_key_shape, tuple(out_bound), out.dtype)
-    lmask_b = None if lmask is None else lmask.reshape(
-        tuple(f_out_l) + (1,) * (k_out - kl))
-    mask = _full_mask_and(lmask_b, rmask_b, out_key_shape)
+    rt = RelType(g.out_key_shape, tuple(out_bound), out.dtype)
+    lmask_b = None if g.lmask is None else g.lmask.reshape(
+        g.f_out_l + (1,) * (g.k_out - g.kl))
+    mask = _full_mask_and(lmask_b, rmask_b, g.out_key_shape)
     return TensorRelation(out, rt, mask)
 
 
@@ -316,6 +349,246 @@ def agg(rel: TensorRelation, group_by: Sequence[int],
         out = _tree_fold(flat, kernel)
     rt = RelType(out_key_shape, rel.bound, out.dtype)
     return TensorRelation(out, rt, out_mask)
+
+
+# ==========================================================================
+# Fused join→agg (Σ∘⋈ as a blocked contraction — never materializes the
+# broadcasted cross-product grid the unfused pair would build)
+# ==========================================================================
+
+# Join kernels whose Σ∘⋈ with matAdd is a pure tensor contraction.  The
+# value maps (left-bound, right-bound, out-bound) dims to contraction
+# letters; ``None`` marks an elementwise kernel (all bound dims shared).
+_CONTRACTION_JOINS = {
+    "matMul": ("mk", "kn", "mn"),
+    "matTranMulL": ("km", "kn", "mn"),
+    "matTranMulR": ("mk", "nk", "mn"),
+    "elemMul": None,
+}
+
+
+def can_fuse(join_kernel: Kernel, agg_kernel: Kernel) -> bool:
+    """True when ``agg(join(·, join_kernel), agg_kernel)`` has a fused
+    lowering (a contraction or a streamed associative reduction)."""
+    return (join_kernel.arity == 2 and agg_kernel.arity == 2
+            and agg_kernel.is_associative)
+
+
+def _joint_mask_grid(g: _JoinGeometry) -> Optional[np.ndarray]:
+    """Joined validity grid over the full output key space (bools only —
+    key-grid sized, so cheap even when the payload grid is not)."""
+    if g.lmask is None and g.rmask_t is None:
+        return None
+    lm = (g.lmask if g.lmask is not None
+          else np.ones(g.f_out_l, bool)).reshape(
+        g.f_out_l + (1,) * (g.k_out - g.kl))
+    rm = (g.rmask_t.reshape(g.r_shape) if g.rmask_t is not None
+          else np.ones((1,) * g.k_out, bool))
+    return np.broadcast_to(lm, g.out_key_shape) \
+        & np.broadcast_to(rm, g.out_key_shape)
+
+
+def _fused_out_mask(g: _JoinGeometry, gb: Tuple[int, ...],
+                    reduce_dims: Tuple[int, ...]) -> Optional[np.ndarray]:
+    """Static output mask of agg∘join."""
+    jm = _joint_mask_grid(g)
+    if jm is None:
+        return None
+    om = np.any(jm, axis=reduce_dims) if reduce_dims else jm
+    remaining = [d for d in range(g.k_out) if d not in reduce_dims]
+    om = om.transpose([remaining.index(d) for d in gb])
+    return None if np.all(om) else om
+
+
+def _zero_fill(data: jax.Array, mask: Optional[np.ndarray],
+               bound_rank: int) -> jax.Array:
+    if mask is None:
+        return data
+    m = jnp.asarray(mask.reshape(mask.shape + (1,) * bound_rank))
+    return jnp.where(m, data, jnp.zeros((), data.dtype))
+
+
+def _fused_matmul_2d(g: _JoinGeometry, left: TensorRelation,
+                     right: TensorRelation, jkl: Tuple[int, ...],
+                     gb: Tuple[int, ...]) -> jax.Array:
+    """Collapse Σ∘⋈_(matMul→matAdd) into ONE blocked 2-D matmul.
+
+    Valid when every joined key dim is reduced and every reduced dim is
+    joined: the whole expression is exactly ``(I·m, K·c) @ (K·c, J·n)`` —
+    the paper's claim that the TRA plan *is* the hand-tuned contraction.
+    Dispatches through :func:`repro.kernels.matmul.ops.matmul`, which
+    selects the Pallas MXU kernel on TPU (``impl="auto"``) and the XLA
+    matmul elsewhere.
+    """
+    from repro.kernels.matmul.ops import matmul as matmul_op
+
+    kl = g.kl
+    kept_l = [ax for ax in range(kl) if ax not in jkl]
+    kept_r = [ax for ax in range(kl, g.k_out)]
+    m, c = left.bound
+    _, n = right.bound
+    # left: (f_out_l ++ (m, c)) → (kept_l..., m, joined..., c) → 2-D
+    lperm = kept_l + [kl] + list(jkl) + [kl + 1]
+    L2 = jnp.transpose(g.ldata, lperm).reshape(
+        math.prod(g.f_out_l[ax] for ax in kept_l) * m,
+        math.prod(g.f_out_l[ax] for ax in jkl) * c)
+    # right: covered-axis order → (joined in jkl order..., c, kept_r..., n)
+    pos = {ax: i for i, ax in enumerate(g.covered)}
+    nb = len(g.covered)
+    rperm = [pos[ax] for ax in jkl] + [nb] \
+        + [pos[ax] for ax in kept_r] + [nb + 1]
+    R2 = jnp.transpose(g.rdata_t, rperm).reshape(
+        math.prod(g.f_out_l[ax] for ax in jkl) * c,
+        math.prod(g.out_key_shape[ax] for ax in kept_r) * n)
+    out2 = matmul_op(L2, R2, impl="auto")
+    # back to blocks: (kept_l..., m, kept_r..., n) → gb order ++ (m, n)
+    out = out2.reshape(tuple(g.f_out_l[ax] for ax in kept_l) + (m,)
+                       + tuple(g.out_key_shape[ax] for ax in kept_r) + (n,))
+    axis_of = {ax: i for i, ax in enumerate(kept_l)}
+    for j, ax in enumerate(kept_r):
+        axis_of[ax] = len(kept_l) + 1 + j
+    perm = [axis_of[d] for d in gb] + [len(kept_l),
+                                       len(kept_l) + 1 + len(kept_r)]
+    return jnp.transpose(out, perm)
+
+
+def _fused_einsum(g: _JoinGeometry, left: TensorRelation,
+                  right: TensorRelation, join_kernel: Kernel,
+                  gb: Tuple[int, ...]) -> jax.Array:
+    """Lower Σ∘⋈ to one ``jnp.einsum`` contraction (→ lax.dot_general)."""
+    import string
+    letters = string.ascii_lowercase + string.ascii_uppercase
+    key_l = letters[:g.k_out]
+    spec = _CONTRACTION_JOINS[join_kernel.name]
+    if spec is None:                       # elementwise join kernel
+        r = len(left.bound)
+        bl = br = bo = letters[g.k_out:g.k_out + r]
+    else:
+        fresh = {ch: letters[g.k_out + i]
+                 for i, ch in enumerate(sorted(set("".join(spec))))}
+        bl, br, bo = ("".join(fresh[ch] for ch in part) for part in spec)
+    l_sub = "".join(key_l[ax] for ax in range(g.kl)) + bl
+    r_sub = "".join(key_l[ax] for ax in g.covered) + br
+    o_sub = "".join(key_l[d] for d in gb) + bo
+    ldata = _zero_fill(g.ldata, g.lmask, len(left.bound))
+    rdata = _zero_fill(g.rdata_t, g.rmask_t, len(right.bound))
+    return jnp.einsum(f"{l_sub},{r_sub}->{o_sub}", ldata, rdata)
+
+
+def _fused_chunked(g: _JoinGeometry, left: TensorRelation,
+                   right: TensorRelation, join_kernel: Kernel,
+                   gb: Tuple[int, ...], reduce_dims: Tuple[int, ...],
+                   agg_kernel: Kernel, chunk: int) -> jax.Array:
+    """Stream the reduction over the contracted key dims.
+
+    A ``fori_loop`` walks the flattened reduce-key grid ``chunk`` cells per
+    step; each step materializes only ``chunk`` grid *slices* (one slice =
+    the group-by grid × one reduce coordinate) and folds them into the
+    accumulator with the associative agg kernel.  Peak live payload is
+    O(output + chunk·slice) instead of the unfused O(full grid).
+    """
+    k_out, kl = g.k_out, g.kl
+    out_bound = tuple(join_kernel.out_bound(left.bound, right.bound))
+    ldata_b = g.ldata.reshape(g.f_out_l + (1,) * (k_out - kl)
+                              + tuple(left.bound))
+    rdata_b = g.rdata_t.reshape(g.r_shape + tuple(right.bound))
+    jm = _joint_mask_grid(g)
+    jm_dev = None if jm is None else jnp.asarray(jm)
+    red_sizes = tuple(g.out_key_shape[d] for d in reduce_dims)
+    nred = math.prod(red_sizes)
+
+    def take(x, coords):
+        for d, cidx in zip(reduce_dims, coords):
+            cidx = jnp.minimum(cidx, x.shape[d] - 1)   # clamp size-1 axes
+            x = jax.lax.dynamic_slice_in_dim(x, cidx, 1, axis=d)
+        return x
+
+    def cell_val(i):
+        coords, rem = [], i
+        for sz in reversed(red_sizes):
+            coords.append(rem % sz)
+            rem = rem // sz
+        coords = coords[::-1]
+        val = join_kernel.apply(take(ldata_b, coords), take(rdata_b, coords))
+        if jm_dev is not None:
+            msk = take(jm_dev, coords)
+            fill = jnp.asarray(agg_kernel.identity, val.dtype)
+            val = jnp.where(
+                msk.reshape(msk.shape + (1,) * len(out_bound)), val, fill)
+        return val
+
+    csize = max(1, min(int(chunk), nred))
+    while nred % csize:
+        csize -= 1
+
+    def step_val(s):
+        base = s * csize
+        if csize == 1:
+            return cell_val(base)
+        vals = jax.vmap(lambda j: cell_val(base + j))(jnp.arange(csize))
+        return _tree_fold(vals, agg_kernel)
+
+    acc = step_val(0)
+    acc = jax.lax.fori_loop(
+        1, nred // csize, lambda s, a: agg_kernel.apply(a, step_val(s)), acc)
+
+    res = jnp.squeeze(acc, axis=reduce_dims)
+    remaining = [d for d in range(k_out) if d not in reduce_dims]
+    perm = [remaining.index(d) for d in gb] \
+        + [len(gb) + i for i in range(len(out_bound))]
+    return jnp.transpose(res, perm)
+
+
+def fused_join_agg(left: TensorRelation, right: TensorRelation,
+                   join_keys_l: Sequence[int], join_keys_r: Sequence[int],
+                   join_kernel: Kernel, group_by: Sequence[int],
+                   agg_kernel: Kernel, *, chunk: int = 1) -> TensorRelation:
+    """Σ_(groupBy, aggOp) ∘ ⋈_(jkl, jkr, projOp) without the grid.
+
+    Semantically identical to ``agg(join(left, right, ...), group_by, ...)``
+    (``group_by`` indexes the join's output key space) but lowered as:
+
+    * one blocked 2-D matmul (Pallas on TPU) when (matMul, matAdd) collapses
+      cleanly — the paper's BMM/CPMM/RMM inner contraction;
+    * one ``jnp.einsum``/dot_general for any contraction-shaped pair
+      (matMul / matTranMulL / matTranMulR / elemMul with matAdd);
+    * a chunked ``lax.fori_loop`` streaming reduction for every other
+      associative kernel pair.
+
+    Falls back to the unfused pair when nothing is actually reduced or when
+    holes cannot be identity-filled — the unfused path remains the
+    correctness oracle in all cases.
+    """
+    jkl, jkr = tuple(join_keys_l), tuple(join_keys_r)
+    gb = tuple(group_by)
+    if not agg_kernel.is_associative:
+        raise ValueError(f"agg kernel {agg_kernel.name} must be associative")
+    g = _join_align(left, right, jkl, jkr)
+    reduce_dims = tuple(d for d in range(g.k_out) if d not in gb)
+    if not reduce_dims or not can_fuse(join_kernel, agg_kernel):
+        return agg(join(left, right, jkl, jkr, join_kernel), gb, agg_kernel)
+
+    out_bound = tuple(join_kernel.out_bound(left.bound, right.bound))
+    out_key_shape = tuple(g.out_key_shape[d] for d in gb)
+    out_mask = _fused_out_mask(g, gb, reduce_dims)
+
+    if agg_kernel.name == "matAdd" and join_kernel.name in _CONTRACTION_JOINS:
+        if (join_kernel.name == "matMul" and g.lmask is None
+                and g.rmask_t is None and set(reduce_dims) == set(jkl)):
+            data = _fused_matmul_2d(g, left, right, jkl, gb)
+        else:
+            data = _fused_einsum(g, left, right, join_kernel, gb)
+        return TensorRelation(
+            data, RelType(out_key_shape, out_bound, data.dtype), out_mask)
+
+    has_mask = g.lmask is not None or g.rmask_t is not None
+    if has_mask and agg_kernel.identity is None:
+        # cannot identity-fill holes — mirror tra.agg's requirement
+        return agg(join(left, right, jkl, jkr, join_kernel), gb, agg_kernel)
+    data = _fused_chunked(g, left, right, join_kernel, gb, reduce_dims,
+                          agg_kernel, chunk)
+    return TensorRelation(
+        data, RelType(out_key_shape, out_bound, data.dtype), out_mask)
 
 
 def rekey(rel: TensorRelation, key_func: KeyFunc,

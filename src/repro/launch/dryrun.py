@@ -39,7 +39,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (get_config, get_shape, input_specs, list_archs,
                            SHAPES, supports_shape)
 from repro.launch.analysis import analyze
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import (cache_spec, count_params, decode_step, init_params,
                           param_shapes, prefill)
 from repro.optim import AdamWConfig
@@ -86,8 +86,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     if mesh_shape is not None:
         # §Perf mesh-refactor iterations: same 256 chips, different
         # (data × model) factorization
-        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh(mesh_shape, ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     chips = math.prod(mesh.shape.values())

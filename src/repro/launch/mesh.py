@@ -11,15 +11,38 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer jax;
+    older releases are implicitly Auto, so simply omit the argument there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def make_abstract_mesh(shape, axes):
+    """`jax.sharding.AbstractMesh` across jax versions.
+
+    Newer jax takes ``(axis_shapes, axis_names)``; 0.4.x takes a single
+    tuple of ``(name, size)`` pairs.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2):
     """Small mesh over host devices (tests / examples)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

@@ -20,14 +20,15 @@ from repro.core.shardmap_exec import execute_shardmap  # noqa: E402
 from repro.core.interp import evaluate_ia  # noqa: E402
 
 
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+
 def mesh1d():
-    return jax.make_mesh((8,), ("sites",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((8,), ("sites",))
 
 
 def mesh2d():
-    return jax.make_mesh((4, 2), ("s0", "s1"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((4, 2), ("s0", "s1"))
 
 
 def matmul_plan(fl, fr, bl, br):

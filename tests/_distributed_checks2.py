@@ -25,9 +25,11 @@ from repro.sharding import (batch_pspecs, make_sharder, param_pspecs,  # noqa: E
                             plan_arch, zero1_pspecs)
 
 
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+
 def mesh42():
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((4, 2), ("data", "model"))
 
 
 def check_sharded_step_matches_unsharded():
@@ -76,8 +78,7 @@ def check_sharded_step_matches_unsharded():
 
 
 def check_gpipe():
-    mesh = jax.make_mesh((8,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("stage",))
     S, M, B, D = 8, 16, 2, 32
     ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) * 0.2
     run = gpipe(lambda p, x: jnp.tanh(x @ p["w"]), mesh, "stage")
@@ -110,8 +111,7 @@ def check_elastic_remesh():
         tr.save()
         tr.store.wait()
         # rescale: "lose half the cluster" → 2×2 mesh
-        mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh_b = make_mesh((2, 2), ("data", "model"))
         shape = ShapeSpec("t", 16, 8, "train")
         state, extra, plan = elastic_restore(
             CheckpointStore(d), cfg, mesh_b, shape, tcfg)

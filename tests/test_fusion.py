@@ -1,0 +1,265 @@
+"""Fused Σ∘⋈ contraction path: semantics, plan selection, rewrite.
+
+The unfused pair (``tra.agg(tra.join(...))``) and the dict-of-numpy
+reference executor are the correctness oracles; every fused lowering —
+2-D collapsed matmul, einsum contraction, chunked streaming reduction —
+must agree with them, including over masked (holey) relations.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (FusedJoinAgg, Placement, RelType, TraAgg, TraInput,
+                        TraJoin, compile_tra, describe, evaluate_ia,
+                        evaluate_tra, from_tensor, fuse_join_agg,
+                        fused_join_agg, get_kernel, infer, optimize,
+                        to_tensor)
+from repro.core import reference as ref
+from repro.core import tra
+from repro.core.cost import cost_plan
+from repro.core.programs import bmm_fused_plan, cpmm_fused_plan, cpmm_plan
+
+S = ("sites",)
+SZ = {"sites": 4}
+
+
+def rand_rel(key, f, b):
+    x = jax.random.normal(jax.random.PRNGKey(key),
+                          (f[0] * b[0], f[1] * b[1]), jnp.float32)
+    return from_tensor(x, b), x
+
+
+def holey(rel, pred):
+    return tra.filt(rel, pred)
+
+
+def assert_rel_close(got, want, rtol=1e-4, atol=1e-4):
+    assert got.rtype == want.rtype, (got.rtype, want.rtype)
+    gm = None if got.mask is None else got.mask
+    wm = None if want.mask is None else want.mask
+    assert (gm is None) == (wm is None)
+    if gm is not None:
+        np.testing.assert_array_equal(gm, wm)
+        sel = wm
+        np.testing.assert_allclose(np.asarray(got.data)[sel],
+                                   np.asarray(want.data)[sel],
+                                   rtol=rtol, atol=atol)
+    else:
+        np.testing.assert_allclose(np.asarray(got.data),
+                                   np.asarray(want.data),
+                                   rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------------------ oracle
+KERNEL_CASES = [
+    ("matMul", "matAdd"),          # 2-D collapse / einsum contraction
+    ("matTranMulL", "matAdd"),     # einsum contraction (weight gradient)
+    ("matTranMulR", "matAdd"),     # einsum contraction (activation grad)
+    ("elemMul", "matAdd"),         # elementwise join, additive reduce
+    ("elemMin", "elemMin"),        # chunked streaming reduction
+    ("matAdd", "matAdd"),          # non-contraction pair → chunked
+    ("elemMul", "elemMax"),        # chunked, non-additive reducer
+]
+
+
+@pytest.mark.parametrize("jk,ak", KERNEL_CASES)
+@pytest.mark.parametrize("masked", [False, True])
+def test_fused_equals_unfused(jk, ak, masked):
+    jkern, akern = get_kernel(jk), get_kernel(ak)
+    RA, _ = rand_rel(0, (3, 4), (4, 4))
+    RB, _ = rand_rel(1, (4, 3), (4, 4))
+    if masked:
+        RA = holey(RA, lambda k: not (k[0] == 1 and k[1] == 2))
+        RB = holey(RB, lambda k: k[0] != 3 or k[1] != 1)
+    for gb in [(0,), (2,), (0, 2), (2, 0)]:
+        want = tra.agg(tra.join(RA, RB, (1,), (0,), jkern), gb, akern)
+        got = fused_join_agg(RA, RB, (1,), (0,), jkern, gb, akern)
+        assert_rel_close(got, want)
+        got_c = fused_join_agg(RA, RB, (1,), (0,), jkern, gb, akern,
+                               chunk=3)
+        assert_rel_close(got_c, want)
+
+
+@pytest.mark.parametrize("jk,ak", [("matMul", "matAdd"),
+                                   ("elemMin", "elemMin")])
+def test_fused_equals_reference_oracle(jk, ak):
+    """Fused path vs the tuple-at-a-time dict-of-numpy reference."""
+    jkern, akern = get_kernel(jk), get_kernel(ak)
+    RA, _ = rand_rel(2, (2, 3), (4, 4))
+    RB, _ = rand_rel(3, (3, 2), (4, 4))
+    RA = holey(RA, lambda k: k != (0, 1))
+    want_d = ref.agg(ref.join(RA.to_dict(), RB.to_dict(), (1,), (0,), jkern),
+                     (0, 2), akern)
+    got = fused_join_agg(RA, RB, (1,), (0,), jkern, (0, 2), akern)
+    got_d = got.to_dict()
+    assert set(got_d) == set(want_d)
+    for k in want_d:
+        np.testing.assert_allclose(got_d[k], want_d[k], rtol=1e-4, atol=1e-4)
+
+
+def test_fused_frontier_mismatch_windows():
+    """Joined dims with unequal frontiers slice to the min window."""
+    mm, add = get_kernel("matMul"), get_kernel("matAdd")
+    RA, _ = rand_rel(4, (2, 5), (4, 4))
+    RB, _ = rand_rel(5, (3, 2), (4, 4))
+    want = tra.agg(tra.join(RA, RB, (1,), (0,), mm), (0, 2), add)
+    got = fused_join_agg(RA, RB, (1,), (0,), mm, (0, 2), add)
+    assert_rel_close(got, want)
+
+
+def test_fused_no_reduce_dims_falls_back():
+    add = get_kernel("matAdd")
+    RA, _ = rand_rel(6, (3, 3), (4, 4))
+    RB, _ = rand_rel(7, (3, 3), (4, 4))
+    want = tra.agg(tra.join(RA, RB, (0, 1), (0, 1), add), (1, 0), add)
+    got = fused_join_agg(RA, RB, (0, 1), (0, 1), add, (1, 0), add)
+    assert_rel_close(got, want)
+
+
+# ------------------------------------------------------- hypothesis sweep
+def test_fused_property_sweep():
+    """Randomized sweep (hypothesis when available, fixed seeds otherwise)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        rng = np.random.default_rng(0)
+        trials = [(int(rng.integers(1, 4)), int(rng.integers(1, 4)),
+                   int(rng.integers(1, 4)), bool(rng.integers(2)))
+                  for _ in range(12)]
+    else:
+        trials = None
+
+    def check(i, k, j, masked):
+        mm, add = get_kernel("matMul"), get_kernel("matAdd")
+        RA, _ = rand_rel(10 + i, (i, k), (2, 3))
+        RB, _ = rand_rel(20 + j, (k, j), (3, 2))
+        if masked and i * k > 1:
+            RA = holey(RA, lambda key: key != (i - 1, k - 1))
+        want = tra.agg(tra.join(RA, RB, (1,), (0,), mm), (0, 2), add)
+        got = fused_join_agg(RA, RB, (1,), (0,), mm, (0, 2), add)
+        assert_rel_close(got, want)
+
+    if trials is None:
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+               st.booleans())
+        def prop(i, k, j, masked):
+            check(i, k, j, masked)
+
+        prop()
+    else:
+        for t in trials:
+            check(*t)
+
+
+# ------------------------------------------------------------- plan level
+def matmul_tra_plan(fl, fr, bl, br):
+    ta = TraInput("A", RelType(fl, bl))
+    tb = TraInput("B", RelType(fr, br))
+    return TraAgg(TraJoin(ta, tb, (1,), (0,), get_kernel("matMul")),
+                  (0, 2), get_kernel("matAdd"))
+
+
+def test_optimizer_selects_fused_for_cpmm():
+    plan = matmul_tra_plan((4, 4), (4, 4), (8, 8), (8, 8))
+    r = optimize(plan, {"A": Placement.partitioned((1,), S),
+                        "B": Placement.partitioned((0,), S)}, S, SZ)
+    assert "FusedJoinAgg" in describe(r.plan), describe(r.plan)
+    RA, A = rand_rel(0, (4, 4), (8, 8))
+    RB, B = rand_rel(1, (4, 4), (8, 8))
+    got = evaluate_ia(r.plan, {"A": RA, "B": RB})
+    np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                               np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+
+
+def test_optimizer_fused_never_costs_more():
+    """Fusion is comm-neutral: best cost with fusion == seed enumeration."""
+    plan = matmul_tra_plan((4, 8), (8, 4), (4, 4), (4, 4))
+    for places in [
+        {"A": Placement.partitioned((1,), S),
+         "B": Placement.partitioned((0,), S)},
+        {"A": Placement.partitioned((0,), S),
+         "B": Placement.partitioned((0,), S)},
+        {"A": Placement.replicated(), "B": Placement.replicated()},
+    ]:
+        r = optimize(plan, places, S, SZ)
+        RA, A = rand_rel(2, (4, 8), (4, 4))
+        RB, B = rand_rel(3, (8, 4), (4, 4))
+        got = evaluate_ia(r.plan, {"A": RA, "B": RB})
+        np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                                   np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_node_infer_matches_pair():
+    fused = cpmm_fused_plan((4, 4), (4, 4), (8, 8), (8, 8))
+    pair = cpmm_plan((4, 4), (4, 4), (8, 8), (8, 8))
+    fi, pi = infer(fused), infer(pair)
+    assert fi.rtype == pi.rtype
+    assert fi.placement.kind == pi.placement.kind
+
+
+def test_fused_tmp_cost_below_unfused():
+    """The memory tiebreak: fused plans report less materialization."""
+    fused = cpmm_fused_plan((4, 4), (4, 4), (8, 8), (8, 8))
+    pair = cpmm_plan((4, 4), (4, 4), (8, 8), (8, 8))
+    rf, rp = cost_plan(fused, SZ), cost_plan(pair, SZ)
+    assert rf.flops == rp.flops
+    assert rf.tmp_floats < rp.tmp_floats
+
+
+def test_fuse_rewrite_on_default_compile():
+    """fuse_join_agg collapses LocalAgg(Shuf(LocalJoin(Bcast(L), R)))."""
+    plan = matmul_tra_plan((4, 4), (4, 4), (8, 8), (8, 8))
+    places = {"A": Placement.partitioned((0,), S),
+              "B": Placement.partitioned((0,), S)}
+    ia = compile_tra(plan, places)
+    fz = fuse_join_agg(ia)
+    assert "FusedJoinAgg" in describe(fz), describe(fz)
+    RA, A = rand_rel(4, (4, 4), (8, 8))
+    RB, B = rand_rel(5, (4, 4), (8, 8))
+    want = evaluate_ia(ia, {"A": RA, "B": RB})
+    got = evaluate_ia(fz, {"A": RA, "B": RB})
+    assert_rel_close(got, want)
+    # placement-preserving: parents above the rewrite site stay valid
+    assert infer(fz).placement is not None
+
+
+def test_fused_bmm_and_cpmm_execute():
+    RA, A = rand_rel(6, (4, 4), (8, 8))
+    RB, B = rand_rel(7, (4, 4), (8, 8))
+    for plan in [bmm_fused_plan((4, 4), (4, 4), (8, 8), (8, 8)),
+                 cpmm_fused_plan((4, 4), (4, 4), (8, 8), (8, 8))]:
+        got = evaluate_ia(plan, {"A": RA, "B": RB})
+        np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                                   np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+
+
+def test_evaluate_tra_does_not_fuse_shared_join():
+    """A join with two consumers is computed once and cached, not fused
+    (fusing would force the sibling consumer to recompute the join)."""
+    mm, add = get_kernel("matMul"), get_kernel("matAdd")
+    ta = TraInput("A", RelType((3, 4), (4, 4)))
+    tb = TraInput("B", RelType((4, 3), (4, 4)))
+    j = TraJoin(ta, tb, (1,), (0,), mm)
+    agg1 = TraAgg(j, (0, 2), add)
+    agg2 = TraAgg(j, (2, 0), add)
+    root = TraJoin(agg1, agg2, (0, 1), (1, 0), add)
+    RA, _ = rand_rel(10, (3, 4), (4, 4))
+    RB, _ = rand_rel(11, (4, 3), (4, 4))
+    cache = {}
+    got = evaluate_tra(root, {"A": RA, "B": RB}, cache)
+    assert id(j) in cache          # the shared join was materialized once
+    want = evaluate_tra(root, {"A": RA, "B": RB}, fuse=False)
+    assert_rel_close(got, want)
+
+
+def test_evaluate_tra_fuse_flag_is_oracle_equal():
+    plan = matmul_tra_plan((3, 5), (5, 2), (4, 4), (4, 4))
+    RA, _ = rand_rel(8, (3, 5), (4, 4))
+    RB, _ = rand_rel(9, (5, 2), (4, 4))
+    fused = evaluate_tra(plan, {"A": RA, "B": RB})
+    oracle = evaluate_tra(plan, {"A": RA, "B": RB}, fuse=False)
+    assert_rel_close(fused, oracle)

@@ -3,6 +3,9 @@ integrity-constraint (closedness) claims."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Placement, RelType, TraAgg, TraFilter, TraInput,

@@ -80,8 +80,8 @@ def test_plan_arch_decode_forces_cache_sharding():
 
 
 def test_param_pspecs_rules_and_stack_dims():
-    from jax.sharding import AbstractMesh
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    mesh = make_abstract_mesh((4, 2), ("data", "model"))
     cfg = SMOKES["qwen2.5-14b"]
     shapes = param_shapes(cfg)
     amap = {"data": ("data",), "attn": ("model",), "kv": ("model",),
