@@ -1,4 +1,4 @@
-"""Fused Σ∘⋈ contraction vs the unfused join→agg pair.
+"""Fused Σ∘⋈ contraction vs the unfused join→agg pair, via the Engine.
 
 Measures, for the paper's matmul shapes (§5.1, scaled as in
 :mod:`benchmarks.matmul`) and the FFNN forward contraction (§5.3):
@@ -11,6 +11,12 @@ Measures, for the paper's matmul shapes (§5.1, scaled as in
 * **wall-clock** — median-of-3 jitted execution;
 * whether the optimizer *selects* ``FusedJoinAgg`` automatically for the
   ``agg(join(·, matMul), matAdd)`` pattern.
+
+Both paths run through :class:`repro.core.Engine` on the ``jit`` executor
+— the optimizing engine lowers the Expr to the fused contraction; an
+``optimize=False, fuse=False`` engine stages the unfused oracle pair —
+so the numbers double as a regression guard on frontend-layer overhead
+(an Expr/Engine slowdown would erase the fused path's wall-clock win).
 
 Emits ``BENCH_fusion.json`` next to the repo root and asserts the headline
 regression guard: ≥5× lower peak temp bytes AND lower wall-clock for the
@@ -47,39 +53,65 @@ def _time_it(fn, *args, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def frontend_overhead() -> Dict:
+    """Engine-path dispatch vs calling the same jitted artifact directly.
+
+    Runs the small general shape many times through ``CompiledExpr.run``
+    (env coercion + TensorRelation wrapping) and through the raw jitted
+    callable; the per-call delta is the frontend layer's overhead and must
+    stay within noise of the kernel time at real shapes (sub-ms here).
+    """
+    import jax
+
+    import repro.core as tra
+    from repro.core import Engine, from_tensor
+
+    s, I, K, J = 8, 512, 512, 512
+    ba, bb = (I // s, K // s), (K // s, J // s)
+    A = jax.random.normal(jax.random.PRNGKey(0), (I, K))
+    B = jax.random.normal(jax.random.PRNGKey(1), (K, J))
+    RA, RB = from_tensor(A, ba), from_tensor(B, bb)
+    ce = Engine(executor="jit").compile(
+        tra.input("A", (s, s), ba) @ tra.input("B", (s, s), bb))
+    args = [RA.data if n == "A" else RB.data for n in ce.input_names]
+    raw = _time_it(lambda: ce.jitted(*args), iters=20)
+    eng = _time_it(lambda: ce.run(A=RA, B=RB).data, iters=20)
+    return {"raw_ms": round(raw * 1e3, 3), "engine_ms": round(eng * 1e3, 3),
+            "overhead_ms": round((eng - raw) * 1e3, 3)}
+
+
 def bench_shape(name: str, I: int, K: int, J: int, s: int) -> Dict:
     import jax
     import numpy as np
 
-    from repro.core import from_tensor, get_kernel
-    from repro.core import tra
+    import repro.core as tra
+    from repro.core import Engine, from_tensor
 
-    mm, add = get_kernel("matMul"), get_kernel("matAdd")
     ba, bb = (I // s, K // s), (K // s, J // s)
     A = jax.random.normal(jax.random.PRNGKey(0), (I, K))
     B = jax.random.normal(jax.random.PRNGKey(1), (K, J))
     RA, RB = from_tensor(A, ba), from_tensor(B, bb)
 
-    def unfused(a, b):
-        ra = tra.TensorRelation(a, RA.rtype)
-        rb = tra.TensorRelation(b, RB.rtype)
-        return tra.agg(tra.join(ra, rb, (1,), (0,), mm), (0, 2), add).data
-
-    def fused(a, b):
-        ra = tra.TensorRelation(a, RA.rtype)
-        rb = tra.TensorRelation(b, RB.rtype)
-        return tra.fused_join_agg(ra, rb, (1,), (0,), mm, (0, 2), add).data
+    expr = tra.input("A", (s, s), ba) @ tra.input("B", (s, s), bb)
+    engines = {
+        # unfused oracle: the logical walk with fusion disabled
+        "unfused": Engine(executor="jit", optimize=False, fuse=False),
+        # production path: the optimizer selects the fused contraction
+        "fused": Engine(executor="jit"),
+    }
 
     rec: Dict = {"shape": name, "I": I, "K": K, "J": J, "sites": s}
     outs = {}
-    for tag, f in [("unfused", unfused), ("fused", fused)]:
-        jf = jax.jit(f)
-        compiled = jf.lower(RA.data, RB.data).compile()
+    for tag, engine in engines.items():
+        ce = engine.compile(expr)
+        args = [RA.data if n == "A" else RB.data for n in ce.input_names]
+        compiled = ce.jitted.lower(*args).compile()
         ma = compiled.memory_analysis()
         temp = int(ma.temp_size_in_bytes) if ma is not None else -1
         rec[f"{tag}_temp_bytes"] = temp
-        rec[f"{tag}_ms"] = round(_time_it(jf, RA.data, RB.data) * 1e3, 2)
-        outs[tag] = np.asarray(jf(RA.data, RB.data))
+        rec[f"{tag}_ms"] = round(
+            _time_it(lambda: ce.run(A=RA, B=RB).data) * 1e3, 2)
+        outs[tag] = np.asarray(ce.run(A=RA, B=RB).data)
     np.testing.assert_allclose(outs["fused"], outs["unfused"],
                                rtol=1e-3, atol=1e-3 * K ** 0.5)
     if rec["unfused_temp_bytes"] > 0 and rec["fused_temp_bytes"] > 0:
@@ -91,24 +123,23 @@ def bench_shape(name: str, I: int, K: int, J: int, s: int) -> Dict:
 
 def optimizer_selects_fused() -> bool:
     """agg(join(·, matMul), matAdd) must compile to FusedJoinAgg."""
-    from repro.core import (Placement, RelType, TraAgg, TraInput, TraJoin,
-                            describe, get_kernel, optimize)
+    import repro.core as tra
+    from repro.core import Engine, Placement
 
     S = ("sites",)
-    ta = TraInput("A", RelType((4, 4), (8, 8)))
-    tb = TraInput("B", RelType((4, 4), (8, 8)))
-    plan = TraAgg(TraJoin(ta, tb, (1,), (0,), get_kernel("matMul")),
-                  (0, 2), get_kernel("matAdd"))
-    r = optimize(plan, {"A": Placement.partitioned((1,), S),
-                        "B": Placement.partitioned((0,), S)},
-                 S, {"sites": 4})
-    return "FusedJoinAgg" in describe(r.plan)
+    expr = tra.input("A", (4, 4), (8, 8)) @ tra.input("B", (4, 4), (8, 8))
+    engine = Engine(input_placements={
+        "A": Placement.partitioned((1,), S),
+        "B": Placement.partitioned((0,), S)}, axis_sizes={"sites": 4})
+    return "FusedJoinAgg" in engine.compile(expr).describe()
 
 
 def run(mesh=None) -> List[str]:
     recs = [bench_shape(n, *args) for n, args in SHAPES.items()]
     sel = optimizer_selects_fused()
+    overhead = frontend_overhead()
     out = {"shapes": recs, "optimizer_selects_fused": sel,
+           "frontend_overhead": overhead,
            "temp_metric": "Compiled.memory_analysis().temp_size_in_bytes"}
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_fusion.json")
@@ -124,14 +155,21 @@ def run(mesh=None) -> List[str]:
             f"wall {r['unfused_ms']:7.1f}→{r['fused_ms']:6.1f} ms "
             f"(×{r['speedup']:.1f})")
     lines.append(f"optimizer selects FusedJoinAgg: {sel}")
+    lines.append(f"frontend dispatch overhead: {overhead['overhead_ms']} ms"
+                 f" (raw {overhead['raw_ms']} → engine "
+                 f"{overhead['engine_ms']})")
 
     guard = next(r for r in recs if r["shape"] == GUARD_SHAPE)
+    # temp ratio is deterministic → hard ≥5× bar at the guard shape;
+    # wall-clock is noisy on shared CPU → fused must merely beat unfused,
+    # but on EVERY shape, so a slow optimizer-selected plan anywhere fails
     ok = (guard.get("temp_ratio", 0) >= GUARD_TEMP_RATIO
-          and guard["fused_ms"] < guard["unfused_ms"] and sel)
-    lines.append(f"regression guard (≥{GUARD_TEMP_RATIO}× temp, faster "
-                 f"wall-clock, auto-selected): {'PASS' if ok else 'FAIL'}")
+          and all(r["fused_ms"] < r["unfused_ms"] for r in recs) and sel)
+    lines.append(f"regression guard (≥{GUARD_TEMP_RATIO}× temp, fused "
+                 f"faster on all shapes, auto-selected, via Engine): "
+                 f"{'PASS' if ok else 'FAIL'}")
     if not ok:
-        raise AssertionError(f"fusion regression guard failed: {guard}")
+        raise AssertionError(f"fusion regression guard failed: {recs}")
     return lines
 
 

@@ -72,11 +72,13 @@ def measured(mesh=None) -> List[Dict]:
     """Scaled execution of the full TRA program through both plans."""
     import jax
     import jax.numpy as jnp
-    from repro.core import evaluate_tra, from_tensor
+    from repro.core import Engine, from_tensor
     from repro.core import tra as tra_ops
     from repro.core.optimize import optimize
     from repro.core.plan import Placement
     from repro.core.programs import nn_search_tra
+
+    engine = Engine(executor="reference", optimize=False)
 
     s = SITES if mesh is None else mesh.shape["sites"]
     out = []
@@ -96,7 +98,7 @@ def measured(mesh=None) -> List[Dict]:
                "X": from_tensor(Xs, (rows, dcol)),
                "A": from_tensor(Am, (dcol, dcol))}
         t0 = time.perf_counter()
-        res = evaluate_tra(prog.result, env)
+        res = engine.run(prog.result, **env)
         val, idx = (float(x) for x in np.asarray(res.data).reshape(-1))
         dt = time.perf_counter() - t0
         diff = Xs - xq

@@ -2,10 +2,11 @@
 
     d_A(x_i, x_q) = (x_i − x_q) A (x_i − x_q)ᵀ,  argmin over rows i
 
-Builds the TRA program, executes it, verifies against a direct jnp
-computation, and compares the paper's two IA implementations
-(Opt4Horizontal vs Opt4Vertical) under the exact cost model — showing the
-model picks the right one per data shape (paper Tables 5–6).
+Builds the TRA program with the Expr frontend, executes it through the
+Engine, verifies against a direct jnp computation, and compares the
+paper's two IA implementations (Opt4Horizontal vs Opt4Vertical) under the
+exact cost model — showing the model picks the right one per data shape
+(paper Tables 5–6).
 
 Run:  PYTHONPATH=src python examples/nn_search.py
 """
@@ -17,9 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import evaluate_tra, from_tensor
+from repro.core import Engine, from_tensor, optimize
 from repro.core import tra as tra_ops
-from repro.core.optimize import optimize
 from repro.core.plan import Placement
 from repro.core.programs import nn_search_tra
 
@@ -42,7 +42,7 @@ def main():
 
     prog = nn_search_tra(n_blocks, d_blocks, rows, dcol)
     env = build_env(Xs, xq, Am, rows, dcol)
-    res = evaluate_tra(prog.result, env)
+    res = Engine(executor="jit", optimize=False).run(prog.result, **env)
     val, idx = (float(x) for x in np.asarray(res.data).reshape(-1))
 
     diff = Xs - xq

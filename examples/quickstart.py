@@ -1,9 +1,11 @@
 """Quickstart: the TRA in 60 lines.
 
-Builds distributed matrix multiply as a TRA expression (paper §2.1's
-running example), compiles it to the IA (Table 1), lets the cost-based
-optimizer pick among BMM / CPMM / RMM placements (§4.2.2), and executes
-both on the reference and dense executors.
+Builds distributed matrix multiply with the lazy ``Expr`` frontend
+(paper §2.1's running example), runs it through the unified ``Engine`` —
+which compiles via Table 1, lets the cost-based optimizer pick among
+BMM / CPMM / RMM placements (§4.2.2), and selects the fused Σ∘⋈
+contraction — and shows the same expression executing on the reference
+and jit executors unchanged.
 
 Run:  python examples/quickstart.py  (or PYTHONPATH=src)
 """
@@ -12,13 +14,10 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Placement, RelType, TraAgg, TraInput, TraJoin,
-                        compile_tra, cost_plan, describe, evaluate_ia,
-                        evaluate_tra, from_tensor, get_kernel, optimize,
-                        to_tensor)
+import repro.core as tra
+from repro.core import Engine, Placement, cost_plan, from_tensor, to_tensor
 
 
 def main():
@@ -32,37 +31,43 @@ def main():
     RB = from_tensor(B, (24, 12))           # frontier (4, 4)
 
     # C = A @ B  ≙  Σ_(⟨0,2⟩, matAdd)( ⋈_(⟨1⟩,⟨0⟩, matMul)(R_A, R_B) )
-    ta = TraInput("A", RA.rtype)
-    tb = TraInput("B", RB.rtype)
-    mm = TraAgg(TraJoin(ta, tb, (1,), (0,), get_kernel("matMul")),
-                (0, 2), get_kernel("matAdd"))
+    # — the Expr frontend builds the logical plan lazily, with shapes
+    # checked at construction time
+    a = tra.input("A", key_shape=(4, 4), bound=(16, 24))
+    b = tra.input("B", key_shape=(4, 4), bound=(24, 12))
+    mm = a @ b
 
-    # logical evaluation
-    out = evaluate_tra(mm, {"A": RA, "B": RB})
+    # one expression, any executor: the eager reference walk...
+    ref = Engine(executor="reference", optimize=False)
+    out = ref.run(mm, A=RA, B=RB)
     np.testing.assert_allclose(np.asarray(to_tensor(out)),
                                np.asarray(A @ B), rtol=1e-4, atol=1e-4)
-    print("TRA logical evaluation matches jnp matmul ✓")
+    print("TRA reference evaluation matches jnp matmul ✓")
 
-    # Table-1 default physical plan (broadcast-based)
-    default = compile_tra(mm, {"A": Placement.partitioned((0,), ("sites",)),
-                               "B": Placement.partitioned((0,), ("sites",))})
-    print("\nTable-1 default IA plan:")
-    print(describe(default))
-    print(cost_plan(default, {"sites": 4}))
+    # ...or the optimizing engine (the paper's §4 optimizer + fused Σ∘⋈),
+    # staged into a single jit.  compile() is cached by structure.
+    eng = Engine(executor="jit",
+                 input_placements={
+                     "A": Placement.partitioned((1,), ("sites",)),
+                     "B": Placement.partitioned((0,), ("sites",))},
+                 axis_sizes={"sites": 4})
+    compiled = eng.compile(mm)
+    print(f"\noptimized plan (cost {compiled.cost:,} floats moved):")
+    print(compiled.describe())
 
-    # cost-based optimization (the paper's §4 optimizer)
-    res = optimize(mm,
-                   {"A": Placement.partitioned((1,), ("sites",)),
-                    "B": Placement.partitioned((0,), ("sites",))},
-                   site_axes=("sites",), axis_sizes={"sites": 4})
-    print(f"\noptimized plan (cost {res.cost:,} floats moved):")
-    print(describe(res.plan))
-
-    # the optimized physical plan computes the same thing
-    out2 = evaluate_ia(res.plan, {"A": RA, "B": RB})
+    out2 = compiled.run(A=RA, B=RB)
     np.testing.assert_allclose(np.asarray(to_tensor(out2)),
                                np.asarray(A @ B), rtol=1e-4, atol=1e-4)
-    print("optimized IA plan matches ✓")
+    assert eng.compile(mm) is compiled          # compile-cache hit
+    print("optimized jit execution matches ✓ (compile cached)")
+
+    # the Table-1 default physical plan (what optimize=False engines run)
+    default = tra.compile_tra(mm, {
+        "A": Placement.partitioned((0,), ("sites",)),
+        "B": Placement.partitioned((0,), ("sites",))})
+    print("\nTable-1 default IA plan:")
+    print(tra.describe(default))
+    print(cost_plan(default, {"sites": 4}))
 
 
 if __name__ == "__main__":

@@ -1,4 +1,16 @@
-"""TRA/IA core — the paper's contribution as a composable JAX module."""
+"""TRA/IA core — the paper's contribution as a composable JAX module.
+
+The supported user-facing API is the lazy frontend plus the engine:
+
+    import repro.core as tra
+    A = tra.input("A", key_shape=(4, 4), bound=(16, 24))
+    B = tra.input("B", key_shape=(4, 4), bound=(24, 12))
+    engine = tra.Engine()                  # or Engine(mesh, executor=...)
+    C = engine.run(A @ B, A=RA, B=RB)
+
+``evaluate_tra`` / ``evaluate_ia`` / ``jit_ia_plan`` (and
+``shardmap_exec.execute_shardmap``) remain as deprecated shims.
+"""
 from repro.core.kernels_registry import (Kernel, compose, get_kernel,
                                          register, registered_kernels)
 from repro.core.tra import (RelType, TensorRelation, can_fuse, from_tensor,
@@ -7,11 +19,15 @@ from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, LocalAgg,
                              LocalConcat, LocalFilter, LocalJoin, LocalMap,
                              LocalTile, Placement, Shuf, TraAgg, TraConcat,
                              TraFilter, TraInput, TraJoin, TraReKey, TraTile,
-                             TraTransform, check_valid, describe, infer)
+                             TraTransform, as_node, check_valid, describe,
+                             infer)
 from repro.core.compile import compile_tra
 from repro.core.cost import (CostReport, HardwareModel, TPU_V5E, comm_cost,
                              cost_plan)
 from repro.core.optimize import OptimizeResult, fuse_join_agg, optimize
+from repro.core.expr import (Expr, ExprTypeError, einsum, input,  # noqa: A004
+                             input_like, wrap)
+from repro.core.engine import CompiledExpr, Engine
 from repro.core.interp import evaluate_ia, evaluate_tra, jit_ia_plan
 
 __all__ = [
@@ -21,8 +37,10 @@ __all__ = [
     "Bcast", "FusedJoinAgg", "IAInput", "LocalAgg", "LocalConcat",
     "LocalFilter", "LocalJoin", "LocalMap", "LocalTile", "Placement", "Shuf",
     "TraAgg", "TraConcat", "TraFilter", "TraInput", "TraJoin", "TraReKey",
-    "TraTile", "TraTransform", "check_valid", "describe", "infer",
+    "TraTile", "TraTransform", "as_node", "check_valid", "describe", "infer",
     "compile_tra", "CostReport", "HardwareModel", "TPU_V5E", "comm_cost",
     "cost_plan", "OptimizeResult", "fuse_join_agg", "optimize",
+    "Expr", "ExprTypeError", "einsum", "input", "input_like", "wrap",
+    "CompiledExpr", "Engine",
     "evaluate_ia", "evaluate_tra", "jit_ia_plan",
 ]

@@ -29,6 +29,8 @@ def compile_tra(node: TraNode,
                 site_axes: Tuple[str, ...] = ("sites",),
                 _cache: Optional[dict] = None) -> IANode:
     """Compile a logical plan to the Table-1 default physical plan."""
+    from repro.core.plan import as_node
+    node = as_node(node)
     placements = input_placements or {}
     cache = _cache if _cache is not None else {}
     if id(node) in cache:

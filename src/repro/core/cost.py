@@ -155,6 +155,8 @@ def move_floats(f_logical: int, src, tgt, axis_sizes: Dict[str, int],
 def cost_plan(root: IANode, axis_sizes: Dict[str, int],
               accounting: str = "wire") -> CostReport:
     """Exact communication + compute cost of a physical plan."""
+    from repro.core.plan import as_node
+    root = as_node(root)
     cache: Dict[int, TypeInfo] = {}
     infer(root, cache=cache)
     s = math.prod(axis_sizes.values()) if axis_sizes else 1

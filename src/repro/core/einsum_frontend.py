@@ -4,24 +4,30 @@ The paper proves TRA ⊇ Einstein notation by construction: every index of a
 tensor becomes a key dim (the tensor is chunked so blocks carry the same
 index structure), a binary term becomes a join on the shared indices, and
 contracted indices are aggregated out with ``matAdd``.  This module is that
-construction, executable:
+construction, executable.
 
-    C = einsum_tra("ij,jk->ik", {"ij": specA, "jk": specB})
+:func:`build_einsum` is the construction itself, over arbitrary logical
+child nodes — it is what :func:`repro.core.expr.einsum` (the ``Expr``
+frontend) calls, so Einstein-notation expressions flow through the same
+builder and optimizer entry path as the fluent API:
 
-builds the logical plan; pairing it with the optimizer yields distributed
-einsums whose placement strategy is chosen by the paper's exact cost model.
+    C = tra.einsum("ij,jk->ik", A, B)          # A, B are Exprs
+
+:func:`einsum_tra` is the original spec-dict form kept for compatibility;
+it wraps each :class:`OperandSpec` in a fresh ``TraInput`` and delegates.
 Chained/multi-operand expressions reduce left-to-right (each step is one
 join+aggregate), matching the grammar's binary production rule.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.kernels_registry import Kernel
-from repro.core.plan import TraAgg, TraInput, TraJoin, TraNode, TraReKey
+from repro.core.kernels_registry import Kernel, get_kernel
+from repro.core.plan import (TraAgg, TraInput, TraJoin, TraNode, TraReKey,
+                             TraTransform)
 from repro.core.tra import RelType
 
 
@@ -46,8 +52,6 @@ def _pairwise_einsum_kernel(idx_l: str, idx_r: str, idx_out: str,
     size = dict(zip(idx_l, bl))
     size.update(zip(idx_r, br))
     out_bound = tuple(size[i] for i in idx_out)
-    contracted = [i for i in set(idx_l) & set(idx_r)]
-    batchish = [i for i in idx_out]
     flops = 2
     for i in set(idx_l) | set(idx_r):
         flops *= size[i]
@@ -64,6 +68,81 @@ def _pairwise_einsum_kernel(idx_l: str, idx_r: str, idx_out: str,
 def parse_spec(spec: str) -> Tuple[List[str], str]:
     lhs, rhs = spec.replace(" ", "").split("->")
     return lhs.split(","), rhs
+
+
+def build_einsum(terms: Sequence[str], out_idx: str,
+                 nodes: Sequence[TraNode],
+                 sizes_list: Sequence[Sequence[int]]) -> TraNode:
+    """The §2.3 construction over existing logical children.
+
+    ``nodes[i]`` is the logical plan for lhs term ``terms[i]``;
+    ``sizes_list[i]`` its bound (one entry per index letter) — key
+    frontiers are carried by the nodes themselves.  Returns the plan
+    computing the einsum with output keys in rhs order.
+    """
+    if len(nodes) < 1:
+        raise ValueError("need at least one operand")
+    cur: TraNode = nodes[0]
+    cur_idx = terms[0]
+    cur_sizes = dict(zip(terms[0], sizes_list[0]))
+
+    for k in range(1, len(nodes)):
+        rhs_remaining = set("".join(terms[k + 1:])) | set(out_idx)
+        nxt = nodes[k]
+        shared = [i for i in cur_idx if i in terms[k]]
+        jkl = tuple(cur_idx.index(i) for i in shared)
+        jkr = tuple(terms[k].index(i) for i in shared)
+        # post-join key order: cur indices ++ (next indices minus joined)
+        post_idx = cur_idx + "".join(i for i in terms[k] if i not in shared)
+        contract = [i for i in shared if i not in rhs_remaining]
+        # the block kernel contracts WITHIN blocks; the agg below contracts
+        # ACROSS blocks.  kernel output = all non-contracted indices.
+        kept_idx = "".join(i for i in post_idx if i not in contract)
+        kern = _pairwise_einsum_kernel(
+            cur_idx, terms[k], kept_idx,
+            [cur_sizes[i] for i in cur_idx], list(sizes_list[k]))
+        joined = TraJoin(cur, nxt, jkl, jkr, kern)
+        if contract:
+            gb = tuple(post_idx.index(i) for i in kept_idx)
+            cur = TraAgg(joined, gb, get_kernel("matAdd"))
+            cur_idx = kept_idx
+        else:
+            cur = joined
+            cur_idx = post_idx
+        cur_sizes.update(zip(terms[k], sizes_list[k]))
+
+    if cur_idx != out_idx:
+        if sorted(cur_idx) != sorted(out_idx):
+            # trailing contraction of indices absent from the output:
+            # contract within blocks (transform) then across blocks (agg)
+            keep = "".join(i for i in cur_idx if i in out_idx)
+            inner = Kernel(
+                name=f"einsum[{cur_idx}->{keep}]", arity=1,
+                apply=lambda a, s=f"...{cur_idx}->...{keep}":
+                    jnp.einsum(s, a),
+                out_bound=lambda b, ci=cur_idx, kp=keep:
+                    tuple(b[ci.index(i)] for i in kp),
+                flops=lambda b: int(jnp.prod(jnp.asarray(b))),
+            )
+            cur = TraTransform(cur, inner)
+            gb = tuple(cur_idx.index(i) for i in keep)
+            cur = TraAgg(cur, gb, get_kernel("matAdd"))
+            cur_idx = keep
+        if cur_idx != out_idx:
+            # permute both the block grid (rekey) and the block interiors
+            # (transform) to the rhs order
+            inv = tuple(cur_idx.index(i) for i in out_idx)
+            tpose = Kernel(
+                name=f"einsum[{cur_idx}->{out_idx}]", arity=1,
+                apply=lambda a, s=f"...{cur_idx}->...{out_idx}":
+                    jnp.einsum(s, a),
+                out_bound=lambda b, p=inv: tuple(b[i] for i in p),
+                flops=lambda b: 0,
+            )
+            cur = TraTransform(cur, tpose)
+            cur = TraReKey(cur, lambda key, p=inv: tuple(key[i] for i in p),
+                           tag=f"permute{inv}")
+    return cur
 
 
 def einsum_tra(spec: str, operands) -> TraNode:
@@ -85,73 +164,7 @@ def einsum_tra(spec: str, operands) -> TraNode:
         specs = list(operands)
     if len(specs) != len(terms):
         raise ValueError("operand count mismatch")
-
-    # start with the first operand
-    cur: TraNode = TraInput(specs[0].name, specs[0].rtype)
-    cur_idx = specs[0].indices
-    cur_blocks = dict(zip(specs[0].indices, specs[0].blocks))
-    cur_sizes = dict(zip(specs[0].indices, specs[0].block_sizes))
-
-    for k, s in enumerate(specs[1:], start=1):
-        rhs_remaining = set("".join(t for t in terms[k + 1:])) | set(out_idx)
-        nxt = TraInput(s.name, s.rtype)
-        shared = [i for i in cur_idx if i in s.indices]
-        jkl = tuple(cur_idx.index(i) for i in shared)
-        jkr = tuple(s.indices.index(i) for i in shared)
-        # post-join key order: cur indices ++ (s indices minus joined)
-        post_idx = cur_idx + "".join(i for i in s.indices if i not in shared)
-        contract = [i for i in shared if i not in rhs_remaining]
-        # the block kernel contracts WITHIN blocks; the agg below contracts
-        # ACROSS blocks.  kernel output = all non-contracted indices.
-        kept_idx = "".join(i for i in post_idx if i not in contract)
-        kern = _pairwise_einsum_kernel(
-            cur_idx, s.indices, kept_idx,
-            [cur_sizes[i] for i in cur_idx], list(s.block_sizes))
-        joined = TraJoin(cur, nxt, jkl, jkr, kern)
-        if contract:
-            from repro.core.kernels_registry import get_kernel
-            gb = tuple(post_idx.index(i) for i in kept_idx)
-            cur = TraAgg(joined, gb, get_kernel("matAdd"))
-            cur_idx = kept_idx
-        else:
-            cur = joined
-            cur_idx = post_idx
-        cur_blocks.update(zip(s.indices, s.blocks))
-        cur_sizes.update(zip(s.indices, s.block_sizes))
-
-    if cur_idx != out_idx:
-        if sorted(cur_idx) != sorted(out_idx):
-            # trailing contraction of indices absent from the output:
-            # contract within blocks (transform) then across blocks (agg)
-            from repro.core.kernels_registry import get_kernel
-            from repro.core.plan import TraTransform
-            keep = "".join(i for i in cur_idx if i in out_idx)
-            sizes = [cur_sizes[i] for i in cur_idx]
-            inner = Kernel(
-                name=f"einsum[{cur_idx}->{keep}]", arity=1,
-                apply=lambda a, s=f"...{cur_idx}->...{keep}":
-                    jnp.einsum(s, a),
-                out_bound=lambda b, ci=cur_idx, kp=keep:
-                    tuple(b[ci.index(i)] for i in kp),
-                flops=lambda b: int(jnp.prod(jnp.asarray(b))),
-            )
-            cur = TraTransform(cur, inner)
-            gb = tuple(cur_idx.index(i) for i in keep)
-            cur = TraAgg(cur, gb, get_kernel("matAdd"))
-            cur_idx = keep
-        if cur_idx != out_idx:
-            # permute both the block grid (rekey) and the block interiors
-            # (transform) to the rhs order
-            from repro.core.plan import TraTransform
-            inv = tuple(cur_idx.index(i) for i in out_idx)
-            tpose = Kernel(
-                name=f"einsum[{cur_idx}->{out_idx}]", arity=1,
-                apply=lambda a, s=f"...{cur_idx}->...{out_idx}":
-                    jnp.einsum(s, a),
-                out_bound=lambda b, p=inv: tuple(b[i] for i in p),
-                flops=lambda b: 0,
-            )
-            cur = TraTransform(cur, tpose)
-            cur = TraReKey(cur, lambda key, p=inv: tuple(key[i] for i in p),
-                           tag=f"permute{inv}")
-    return cur
+    return build_einsum(
+        terms, out_idx,
+        [TraInput(s.name, s.rtype) for s in specs],
+        [s.block_sizes for s in specs])

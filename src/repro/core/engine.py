@@ -1,0 +1,451 @@
+"""Unified evaluation entry point for the TRA: the :class:`Engine`.
+
+One object owns everything between a logical expression and a result:
+
+* the **optimizer invocation** (cost-based placement DP + logical rewrites,
+  including the fused Σ∘⋈ contraction selection) with the engine's mesh
+  topology and accounting mode;
+* the **executor** choice — one declarative expression runs unchanged on
+  any of the four back-ends:
+
+  - ``"reference"`` — the eager sites-ignoring walk (logical plans run the
+    dense eager ops; physical plans the semantics-check IA walk);
+  - ``"jit"``       — the same walk staged into a single ``jax.jit``;
+  - ``"gspmd"``     — one ``jit`` whose placement constraints make XLA emit
+    the plan's collective schedule (requires ``mesh``);
+  - ``"shard_map"`` — paper-faithful explicit collectives (requires
+    ``mesh``);
+  - ``"auto"``      — ``"gspmd"`` when a mesh is given, else ``"jit"``;
+
+* a **keyed compile cache** — structurally identical expressions (same
+  shapes, kernels, placements, executor) reuse the compiled artifact; and
+* the **kernel registry view** (``engine.kernel(name)``).
+
+The only two entry points are ``engine.run(expr, **inputs)`` and
+``engine.compile(expr)``; everything else in :mod:`repro.core.interp` /
+:mod:`repro.core.shardmap_exec` is a deprecated shim over the same
+internals.
+
+``run``/``compile`` accept an :class:`~repro.core.expr.Expr`, a raw
+logical ``TraNode``, an already-built physical ``IANode`` (executed as-is,
+bypassing the optimizer — how hand-compiled paper plans are priced and
+run), or a *tuple* of logical roots (multi-output programs such as the
+§5.3 FFNN step; with ``optimize=False`` shared subexpressions are
+evaluated once across all roots, while optimizer lowering rebuilds each
+root's physical tree independently).  Input values may be
+:class:`TensorRelation`\\ s or raw arrays of the declared dense shape
+``key_shape ++ bound``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.core import kernels_registry as kr
+from repro.core.compile import compile_tra
+from repro.core.interp import _evaluate_ia, _evaluate_tra, _jit_ia_plan
+from repro.core.optimize import OptimizeResult, optimize as _optimize
+from repro.core.plan import (IAInput, IANode, Placement, TraInput, TraNode,
+                             TypeInfo, as_node, describe, infer, postorder)
+from repro.core.tra import TensorRelation
+
+EXECUTORS = ("auto", "reference", "jit", "gspmd", "shard_map")
+
+
+# ==========================================================================
+# Structural plan signatures (compile-cache keys)
+# ==========================================================================
+
+def _kernel_sig(k) -> Tuple:
+    # registered kernels are singletons and factory kernels embed their
+    # parameters in the name (scaleMul(eta), einsum[...]); the id covers
+    # ad-hoc kernels with colliding names
+    return (k.name, id(k.apply))
+
+
+def _func_sig(tag: str, fn) -> Tuple:
+    # user key/bool functions are opaque — the tag plus identity keys them,
+    # so structurally rebuilt expressions sharing the function object hit
+    # the cache while different lambdas under a default tag never collide
+    return (tag, id(fn))
+
+
+def plan_sig(node) -> Tuple:
+    """Structural signature of a logical or physical plan (cache key)."""
+    node = as_node(node)
+    memo: Dict[int, int] = {}
+    parts = []
+
+    def rec(n) -> int:
+        if id(n) in memo:               # shared subexpression → back-ref
+            return memo[id(n)]
+        from repro.core import plan as P
+        if isinstance(n, (P.TraInput, P.IAInput)):
+            sig = ("in", n.name, n.rtype.key_shape, n.rtype.bound,
+                   str(n.rtype.dtype))
+            if isinstance(n, P.IAInput):
+                sig += (n.placement.kind, n.placement.dims,
+                        n.placement.axes, n.placement.dup_axes)
+        elif isinstance(n, (P.TraJoin, P.LocalJoin)):
+            sig = ("join", rec(n.left), rec(n.right), n.join_keys_l,
+                   n.join_keys_r, _kernel_sig(n.kernel))
+        elif isinstance(n, P.FusedJoinAgg):
+            sig = ("fja", rec(n.left), rec(n.right), n.join_keys_l,
+                   n.join_keys_r, _kernel_sig(n.join_kernel), n.group_by,
+                   _kernel_sig(n.agg_kernel), n.partial)
+        elif isinstance(n, (P.TraAgg, P.LocalAgg)):
+            sig = ("agg", rec(n.child), n.group_by, _kernel_sig(n.kernel),
+                   getattr(n, "partial", False))
+        elif isinstance(n, P.TraTransform):
+            sig = ("map", rec(n.child), _kernel_sig(n.kernel))
+        elif isinstance(n, P.LocalMap):
+            sig = ("lmap", rec(n.child), _kernel_sig(n.kernel),
+                   None if n.key_func is None
+                   else _func_sig(n.tag, n.key_func))
+        elif isinstance(n, (P.TraFilter, P.LocalFilter)):
+            sig = ("filter", rec(n.child), _func_sig(n.tag, n.bool_func))
+        elif isinstance(n, P.TraReKey):
+            sig = ("rekey", rec(n.child), _func_sig(n.tag, n.key_func))
+        elif isinstance(n, (P.TraTile, P.LocalTile)):
+            sig = ("tile", rec(n.child), n.tile_dim, n.tile_size)
+        elif isinstance(n, (P.TraConcat, P.LocalConcat)):
+            sig = ("concat", rec(n.child), n.key_dim, n.array_dim)
+        elif isinstance(n, P.Bcast):
+            sig = ("bcast", rec(n.child))
+        elif isinstance(n, P.Shuf):
+            sig = ("shuf", rec(n.child), n.part_dims, n.axes)
+        else:
+            raise TypeError(type(n))
+        memo[id(n)] = len(parts)
+        parts.append(sig)
+        return memo[id(n)]
+
+    rec(node)
+    return tuple(parts)
+
+
+def _placements_sig(placements: Optional[Dict[str, Placement]]) -> Tuple:
+    if not placements:
+        return ()
+    return tuple(sorted(
+        (name, p.kind, p.dims, p.axes, p.dup_axes)
+        for name, p in placements.items()))
+
+
+# ==========================================================================
+# Compiled artifacts
+# ==========================================================================
+
+@dataclasses.dataclass
+class CompiledExpr:
+    """A compiled expression: physical plan (when one exists) + callable.
+
+    ``__call__``/``run`` accept the program inputs by name and return
+    :class:`TensorRelation` results (a tuple for multi-root programs).
+    """
+
+    executor: str
+    roots: Tuple                        # plan nodes (logical or physical)
+    input_rtypes: Dict[str, object]
+    out_infos: Tuple[TypeInfo, ...]
+    _call: Callable                     # env dict -> tuple of TensorRelation
+    opts: Tuple[OptimizeResult, ...] = ()   # one per optimizer-lowered root
+    multi: bool = False                 # caller passed a tuple of roots
+    # jit/gspmd: the underlying jitted callable and its input-name order,
+    # for .lower()/.compile() dry-runs, memory analysis and HLO inspection
+    jitted: Optional[Callable] = None
+    input_names: Optional[Tuple[str, ...]] = None
+
+    @property
+    def plan(self):
+        """The (first) root plan node this artifact executes."""
+        return self.roots[0]
+
+    @property
+    def opt(self) -> Optional[OptimizeResult]:
+        """The optimizer result (single optimized root only)."""
+        return self.opts[0] if len(self.opts) == 1 else None
+
+    @property
+    def cost(self) -> Optional[int]:
+        """Comm cost of the optimizer's plan(s) — summed over roots."""
+        return sum(o.cost for o in self.opts) if self.opts else None
+
+    def describe(self) -> str:
+        return "\n".join(describe(r) for r in self.roots)
+
+    def run(self, **inputs) -> Union[TensorRelation, Tuple]:
+        unknown = [n for n in inputs if n not in self.input_rtypes]
+        if unknown:
+            raise ValueError(f"unexpected inputs: {unknown}; "
+                             f"expected {sorted(self.input_rtypes)}")
+        env = {name: _coerce(name, val, self.input_rtypes[name])
+               for name, val in inputs.items()}
+        missing = [n for n in self.input_rtypes if n not in env]
+        if missing:
+            raise ValueError(f"missing inputs: {missing}; "
+                             f"expected {sorted(self.input_rtypes)}")
+        if self.executor != "reference":
+            # staged executors rebuild relations from raw arrays inside
+            # the compiled artifact, so an input-side static mask would be
+            # silently dropped — only the eager reference walk threads
+            # per-value masks through (plan-level masks from in-plan
+            # filters are unaffected; they live in the inferred types)
+            holey = [n for n, r in env.items() if r.mask is not None]
+            if holey:
+                raise NotImplementedError(
+                    f"executor {self.executor!r} requires continuous "
+                    f"(mask-free) input relations; inputs {holey} carry "
+                    f"masks — run on executor=\"reference\", or express "
+                    f"the filter inside the plan")
+        outs = self._call(env)
+        return outs if self.multi else outs[0]
+
+    __call__ = run
+
+
+def _coerce(name: str, value, rtype) -> TensorRelation:
+    if isinstance(value, TensorRelation):
+        return value
+    if rtype is None:
+        raise ValueError(f"unexpected input {name!r}")
+    expect = tuple(rtype.key_shape) + tuple(rtype.bound)
+    if tuple(value.shape) != expect:
+        raise ValueError(
+            f"input {name!r}: dense shape {tuple(value.shape)} != "
+            f"key_shape ++ bound {expect}")
+    return TensorRelation(value, rtype)
+
+
+def _input_nodes(roots) -> Dict[str, object]:
+    """name -> rtype over all roots; duplicate names must agree."""
+    rtypes: Dict[str, object] = {}
+    for root in roots:
+        for n in postorder(root):
+            if isinstance(n, (TraInput, IAInput)):
+                prev = rtypes.get(n.name)
+                if prev is not None and prev != n.rtype:
+                    raise ValueError(
+                        f"input {n.name!r} declared with conflicting types "
+                        f"{prev} vs {n.rtype}")
+                rtypes[n.name] = n.rtype
+    return rtypes
+
+
+# ==========================================================================
+# Engine
+# ==========================================================================
+
+class Engine:
+    """Unified entry point: optimizer + executor + compile cache.
+
+    Parameters
+    ----------
+    mesh:
+        Optional :class:`jax.sharding.Mesh`.  Provides the site axes and
+        sizes for the optimizer and is required by the distributed
+        executors.
+    executor:
+        One of ``"auto" | "reference" | "jit" | "gspmd" | "shard_map"``.
+    optimize:
+        ``True`` (default) runs the cost-based optimizer on logical roots
+        (fused Σ∘⋈ selection included).  ``False`` compiles the Table-1
+        default plan for distributed executors and walks the logical tree
+        directly on ``reference``/``jit``.
+    fuse:
+        Only meaningful with ``optimize=False`` on logical walks: forward
+        the ``fuse`` flag of the eager evaluator (``False`` = the unfused
+        correctness oracle).
+    input_placements / site_axes / axis_sizes / accounting /
+    try_logical_rewrites:
+        Optimizer configuration, defaulted from ``mesh`` when given
+        (1-site ``("sites",)`` otherwise).
+    """
+
+    def __init__(self, mesh=None, executor: str = "auto",
+                 optimize: bool = True, *,
+                 input_placements: Optional[Dict[str, Placement]] = None,
+                 site_axes: Optional[Sequence[str]] = None,
+                 axis_sizes: Optional[Dict[str, int]] = None,
+                 accounting: str = "wire",
+                 try_logical_rewrites: bool = True,
+                 fuse: bool = True):
+        if executor not in EXECUTORS:
+            raise ValueError(
+                f"unknown executor {executor!r}; choose from {EXECUTORS}")
+        self.mesh = mesh
+        self.executor = executor
+        self.optimize = optimize
+        self.fuse = fuse
+        self.accounting = accounting
+        self.try_logical_rewrites = try_logical_rewrites
+        self.input_placements = dict(input_placements or {})
+        if site_axes is None:
+            site_axes = tuple(mesh.axis_names) if mesh is not None \
+                else ("sites",)
+        self.site_axes = tuple(site_axes)
+        if axis_sizes is None:
+            axis_sizes = ({a: int(mesh.shape[a]) for a in self.site_axes}
+                          if mesh is not None
+                          else {a: 1 for a in self.site_axes})
+        self.axis_sizes = dict(axis_sizes)
+        self._cache: Dict[Tuple, CompiledExpr] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- kernel registry view ---------------------------------------------
+    @staticmethod
+    def kernel(name: str) -> kr.Kernel:
+        return kr.get_kernel(name)
+
+    @staticmethod
+    def kernels() -> Sequence[str]:
+        return kr.registered_kernels()
+
+    # -- entry points ------------------------------------------------------
+    def run(self, expr, **inputs) -> Union[TensorRelation, Tuple]:
+        """Compile (with caching) and execute in one call."""
+        return self.compile(expr).run(**inputs)
+
+    def compile(self, expr,
+                input_placements: Optional[Dict[str, Placement]] = None,
+                target: Optional[Placement] = None) -> CompiledExpr:
+        """Compile an expression for this engine's executor.
+
+        ``input_placements`` (falling back to the engine-level default)
+        seed the optimizer; ``target`` constrains the result placement.
+        """
+        multi = isinstance(expr, (tuple, list))
+        roots = tuple(as_node(e) for e in (expr if multi else (expr,)))
+        placements = dict(self.input_placements)
+        placements.update(input_placements or {})
+        executor = self._resolve_executor()
+
+        key = (tuple(plan_sig(r) for r in roots), executor, self.optimize,
+               self.fuse, self.accounting, self.try_logical_rewrites,
+               _placements_sig(placements),
+               _placements_sig({"·": target} if target else None),
+               multi)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+            return hit
+        self.cache_misses += 1
+        compiled = self._compile(roots, placements, target, executor, multi)
+        self._cache[key] = compiled
+        return compiled
+
+    # -- internals ---------------------------------------------------------
+    def _resolve_executor(self) -> str:
+        if self.executor != "auto":
+            return self.executor
+        return "gspmd" if self.mesh is not None else "jit"
+
+    def _physical_roots(self, roots, placements, target):
+        """Lower logical roots to physical plans; pass IANodes through.
+
+        Each logical root is optimized *independently* — physical lowering
+        rebuilds nodes, so cross-root DAG sharing only survives on the
+        unoptimized logical walk (``optimize=False``).  Multi-output
+        programs that lean on a shared forward pass should therefore
+        compile with ``optimize=False`` (as the §5.3 FFNN example does);
+        ``CompiledExpr.cost`` sums the per-root plan costs.
+        """
+        phys, opts = [], []
+        for r in roots:
+            if isinstance(r, IANode):
+                phys.append(r)
+            elif self.optimize:
+                opt = _optimize(
+                    r, placements, site_axes=self.site_axes,
+                    axis_sizes=self.axis_sizes, target=target,
+                    try_logical_rewrites=self.try_logical_rewrites,
+                    accounting=self.accounting)
+                opts.append(opt)
+                phys.append(opt.plan)
+            else:
+                phys.append(compile_tra(r, placements, self.site_axes))
+        return tuple(phys), tuple(opts)
+
+    def _compile(self, roots, placements, target, executor,
+                 multi) -> CompiledExpr:
+        if executor in ("gspmd", "shard_map"):
+            if self.mesh is None:
+                raise ValueError(f"executor {executor!r} requires a mesh")
+            if len(roots) != 1:
+                raise NotImplementedError(
+                    f"executor {executor!r} supports a single root; got "
+                    f"{len(roots)} (evaluate multi-output programs on "
+                    f'"reference"/"jit", or compile each root)')
+            phys, opts = self._physical_roots(roots, placements, target)
+            out_infos = tuple(infer(p) for p in phys)
+            jfn = names = None
+            if executor == "gspmd":
+                call, jfn, names = self._gspmd_call(phys[0])
+            else:
+                call = self._shardmap_call(phys[0])
+            return CompiledExpr(executor, phys, _input_nodes(phys),
+                                out_infos, call, opts, multi,
+                                jitted=jfn, input_names=names)
+
+        # reference / jit: logical roots run the eager TRA walk (optimized
+        # ones run the physical walk); shared subexpressions are evaluated
+        # once via the id-keyed cache shared across roots.
+        if self.optimize or any(isinstance(r, IANode) for r in roots):
+            plans, opts = self._physical_roots(roots, placements, target)
+        else:
+            plans, opts = roots, ()
+        out_infos = tuple(infer(p) for p in plans)
+        rtypes = _input_nodes(plans)
+
+        def eval_all(env):
+            cache: dict = {}
+            outs = []
+            for p in plans:
+                if isinstance(p, IANode):
+                    outs.append(_evaluate_ia(p, env, _cache=cache))
+                else:
+                    outs.append(_evaluate_tra(p, env, cache,
+                                              fuse=self.fuse))
+            return tuple(outs)
+
+        if executor == "reference":
+            return CompiledExpr("reference", plans, rtypes, out_infos,
+                                eval_all, opts, multi)
+
+        names = sorted(rtypes)
+
+        def fn(*arrays):
+            env = {n: TensorRelation(a, rtypes[n])
+                   for n, a in zip(names, arrays)}
+            return tuple(r.data for r in eval_all(env))
+
+        jfn = jax.jit(fn)
+
+        def call(env):
+            datas = jfn(*(env[n].data for n in names))
+            return tuple(TensorRelation(d, oi.rtype, oi.mask)
+                         for d, oi in zip(datas, out_infos))
+
+        return CompiledExpr("jit", plans, rtypes, out_infos, call, opts,
+                            multi, jitted=jfn, input_names=tuple(names))
+
+    def _gspmd_call(self, plan):
+        jfn, names = _jit_ia_plan(plan, self.mesh)
+        out_info = infer(plan)
+
+        def call(env):
+            data = jfn(*(env[n].data for n in names))
+            return (TensorRelation(data, out_info.rtype, out_info.mask),)
+
+        return call, jfn, tuple(names)
+
+    def _shardmap_call(self, plan):
+        from repro.core.shardmap_exec import _execute_shardmap
+
+        def call(env):
+            return (_execute_shardmap(plan, env, self.mesh),)
+
+        return call

@@ -2,10 +2,11 @@
 
 Three evaluation modes:
 
-* ``evaluate_tra``   — walk a logical plan with the dense eager ops.
-* ``evaluate_ia``    — walk a physical plan ignoring sites (semantics check:
-  a valid IA plan must equal its TRA source after projecting away sites).
-* ``evaluate_ia_spmd`` — production path.  The same walk, but every
+* ``_evaluate_tra``   — walk a logical plan with the dense eager ops.
+* ``_evaluate_ia``    — walk a physical plan ignoring sites (semantics
+  check: a valid IA plan must equal its TRA source after projecting away
+  sites).
+* ``_evaluate_ia(spmd=True)`` — production path.  The same walk, but every
   ``BCAST``/``SHUF``/input placement becomes a sharding constraint inside a
   single ``jit``; XLA emits the collective schedule that the placements
   dictate (all-gather for BCAST, all-to-all for SHUF, reduce-scatter /
@@ -13,9 +14,19 @@ Three evaluation modes:
 
 A fourth mode — explicit shard_map collectives — lives in
 :mod:`repro.core.shardmap_exec`.
+
+The public names ``evaluate_tra`` / ``evaluate_ia`` / ``jit_ia_plan`` are
+**deprecated shims** over the internals: the supported entry points are
+``Engine.run`` / ``Engine.compile`` in :mod:`repro.core.engine`, which add
+the optimizer, the compile cache, and a uniform executor selection on top
+of these walks.  The shims warn with ``stacklevel`` pointing at the caller,
+so the CI deprecation gate (``-W error::DeprecationWarning`` filtered to
+``repro.*``) proves nothing inside the library still routes through them
+while oracle tests may keep calling them directly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, Optional
 
 import jax
@@ -27,13 +38,20 @@ from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
                              LocalConcat, LocalFilter, LocalJoin, LocalMap,
                              LocalTile, Placement, Shuf, TraAgg, TraConcat,
                              TraFilter, TraInput, TraJoin, TraNode, TraReKey,
-                             TraTile, TraTransform, children, infer,
+                             TraTile, TraTransform, as_node, children, infer,
                              postorder)
 from repro.core.tra import TensorRelation
 
-def evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
-                 _cache: Optional[dict] = None,
-                 fuse: bool = True) -> TensorRelation:
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.core.{old} is deprecated; use {new} "
+                  f"(see repro.core.engine.Engine)",
+                  DeprecationWarning, stacklevel=3)
+
+
+def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
+                  _cache: Optional[dict] = None,
+                  fuse: bool = True) -> TensorRelation:
     """Walk a logical plan with the dense eager ops.
 
     With ``fuse=True`` (default) every ``TraAgg(TraJoin(...))`` pair whose
@@ -42,6 +60,7 @@ def evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
     more than one consumer are exempt (they are computed once and cached).
     Pass ``fuse=False`` to force the unfused pair (the correctness oracle).
     """
+    node = as_node(node)
     cache = _cache if _cache is not None else {}
     shared: set = set()
     if fuse:
@@ -87,6 +106,14 @@ def evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
     return rec(node)
 
 
+def evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
+                 _cache: Optional[dict] = None,
+                 fuse: bool = True) -> TensorRelation:
+    """Deprecated shim — use ``Engine(executor="reference").run(expr, ...)``."""
+    _warn_deprecated("evaluate_tra", 'Engine(executor="reference").run')
+    return _evaluate_tra(node, env, _cache, fuse)
+
+
 def _pspec_for(placement: Optional[Placement], rtype) -> P:
     """PartitionSpec over the dense layout ``key_shape + bound``."""
     if placement is None or placement.is_replicated:
@@ -101,22 +128,23 @@ def _pspec_for(placement: Optional[Placement], rtype) -> P:
     return P(*entries)
 
 
-def evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
-                mesh: Optional[Mesh] = None,
-                spmd: bool = False,
-                _cache: Optional[dict] = None) -> TensorRelation:
+def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
+                 mesh: Optional[Mesh] = None,
+                 spmd: bool = False,
+                 _cache: Optional[dict] = None) -> TensorRelation:
     """Evaluate a physical plan.
 
     With ``spmd=True`` (requires ``mesh``) every placement-bearing node gets
     a ``with_sharding_constraint`` so that, lowered under ``jit``, XLA
     produces exactly the data movement the IA plan prescribes.
     """
+    node = as_node(node)
     cache = _cache if _cache is not None else {}
     if id(node) in cache:
         return cache[id(node)]
 
     def rec(n):
-        return evaluate_ia(n, env, mesh, spmd, cache)
+        return _evaluate_ia(n, env, mesh, spmd, cache)
 
     def constrain(rel: TensorRelation, placement: Placement) -> TensorRelation:
         if not spmd or mesh is None or placement is None:
@@ -172,16 +200,25 @@ def evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
     return out
 
 
-def jit_ia_plan(root: IANode, mesh: Mesh,
-                input_order: Optional[list] = None) -> Callable:
+def evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
+                mesh: Optional[Mesh] = None,
+                spmd: bool = False,
+                _cache: Optional[dict] = None) -> TensorRelation:
+    """Deprecated shim — use ``Engine.run`` (``executor="reference"`` for
+    the sites-ignoring walk, ``executor="gspmd"`` for the SPMD path)."""
+    _warn_deprecated("evaluate_ia", "Engine.run")
+    return _evaluate_ia(node, env, mesh, spmd, _cache)
+
+
+def _jit_ia_plan(root: IANode, mesh: Mesh,
+                 input_order: Optional[list] = None) -> Callable:
     """Build a jitted function ``(*arrays) -> array`` executing ``root``.
 
     Input arrays arrive in ``input_order`` (names); shardings follow the
     plan's input placements.  The returned callable is suitable for
     ``.lower().compile()`` dry-runs and for real execution.
     """
-    from repro.core.plan import postorder
-
+    root = as_node(root)
     inputs = [n for n in postorder(root) if isinstance(n, IAInput)]
     by_name = {n.name: n for n in inputs}
     names = input_order or sorted(by_name)
@@ -191,10 +228,17 @@ def jit_ia_plan(root: IANode, mesh: Mesh,
         for name, arr in zip(names, arrays):
             node = by_name[name]
             env[name] = TensorRelation(arr, node.rtype)
-        rel = evaluate_ia(root, env, mesh=mesh, spmd=True)
+        rel = _evaluate_ia(root, env, mesh=mesh, spmd=True)
         return rel.data
 
     in_shardings = tuple(
         NamedSharding(mesh, _pspec_for(by_name[n].placement, by_name[n].rtype))
         for n in names)
     return jax.jit(fn, in_shardings=in_shardings), names
+
+
+def jit_ia_plan(root: IANode, mesh: Mesh,
+                input_order: Optional[list] = None) -> Callable:
+    """Deprecated shim — use ``Engine(mesh, executor="gspmd").compile``."""
+    _warn_deprecated("jit_ia_plan", 'Engine(mesh, executor="gspmd").compile')
+    return _jit_ia_plan(root, mesh, input_order)

@@ -421,6 +421,8 @@ def optimize(root: TraNode,
              try_logical_rewrites: bool = True,
              accounting: str = "wire") -> OptimizeResult:
     """Full optimization: logical variants × placement DP; min comm cost."""
+    from repro.core.plan import as_node
+    root = as_node(root)
     input_placements = input_placements or {}
     axis_sizes = axis_sizes or {a: 1 for a in site_axes}
     variants = logical_variants(root) if try_logical_rewrites else [root]
@@ -537,13 +539,11 @@ def fuse_join_agg(root: IANode) -> IANode:
                     and set(c.part_dims) <= set(out.group_by)):
                 j = c.child
                 odims = tuple(out.group_by.index(d) for d in c.part_dims)
-                # partial=True leaves pending duplicates whose resolution
-                # (psum/psum_scatter in shard_map mode) only exists for
-                # additive reducers — other kernels fuse without the
-                # two-phase split
-                variants = (True, False) if out.kernel.name == "matAdd" \
-                    else (False,)
-                for partial in variants:
+                # partial=True leaves pending duplicates resolved by the
+                # next Shuf/Bcast: psum/psum_scatter for matAdd, the
+                # pmax/pmin/gather-fold psum-equivalents for every other
+                # associative reducer (shardmap_exec._cross_site_reduce)
+                for partial in (True, False):
                     fused = FusedJoinAgg(
                         j.left, j.right, j.join_keys_l, j.join_keys_r,
                         j.kernel, out.group_by, out.kernel, partial=partial)

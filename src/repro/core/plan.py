@@ -252,6 +252,23 @@ class LocalConcat(IANode):
     array_dim: int
 
 
+def as_node(obj):
+    """Unwrap an :class:`repro.core.expr.Expr`-like handle to its plan node.
+
+    Duck-typed (``obj.node``) so this module never imports the frontend;
+    plain plan nodes pass through untouched.  Every legacy entry point
+    (``evaluate_*``, ``optimize``, ``compile_tra``, ``infer``, ``describe``)
+    unwraps through this, so code written against the old API composes with
+    ``Expr``-returning builders.
+    """
+    if isinstance(obj, (TraNode, IANode)):
+        return obj
+    node = getattr(obj, "node", None)
+    if isinstance(node, (TraNode, IANode)):
+        return node
+    return obj
+
+
 def children(node) -> Tuple:
     if isinstance(node, (TraJoin, LocalJoin, FusedJoinAgg)):
         return (node.left, node.right)
@@ -277,6 +294,7 @@ def postorder(node) -> list:
 
 
 def describe(node, indent: int = 0) -> str:
+    node = as_node(node)
     pad = "  " * indent
     label = type(node).__name__
     extra = ""
@@ -397,6 +415,7 @@ def _agg_types(ct: TypeInfo, group_by: Tuple[int, ...]) -> TypeInfo:
 def infer(node, env: Optional[Dict[str, TypeInfo]] = None,
           cache: Optional[Dict[int, TypeInfo]] = None) -> TypeInfo:
     """Exact static inference of (type, mask, placement) for any plan node."""
+    node = as_node(node)
     env = env or {}
     cache = cache if cache is not None else {}
     if id(node) in cache:
@@ -678,6 +697,7 @@ def _local_concat_placement(node: LocalConcat,
 def check_valid(root: IANode) -> TypeInfo:
     """Infer types over a physical plan, raising if any local op's placement
     preconditions are violated (i.e. the plan is not TRA-equivalent)."""
+    root = as_node(root)
     cache: Dict[int, TypeInfo] = {}
     info = infer(root, cache=cache)
     for n in postorder(root):

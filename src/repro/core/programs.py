@@ -1,8 +1,13 @@
 """The paper's evaluation workloads as TRA programs (§5.1–§5.3).
 
-Shared by examples/ and benchmarks/: each builder returns logical TRA
-nodes plus the paper's hand-compiled IA plan variants so the cost model's
-choices (Tables 4, 6, 9) can be reproduced and the plans executed.
+Shared by examples/ and benchmarks/: each builder returns lazy
+:class:`~repro.core.expr.Expr` programs — built through the fluent
+frontend, runnable on any executor via
+:class:`~repro.core.engine.Engine` — plus the paper's hand-compiled IA
+plan variants so the cost model's choices (Tables 4, 6, 9) can be
+reproduced and the plans executed.  (Legacy callers that pass these
+results to ``optimize``/``evaluate_*`` still work: every entry point
+unwraps ``Expr`` handles.)
 """
 from __future__ import annotations
 
@@ -11,12 +16,12 @@ from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import expr as E
+from repro.core.expr import Expr
 from repro.core.kernels_registry import (Kernel, get_kernel, make_scale_mul,
                                          make_to_val_idx, register)
 from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
-                             LocalJoin, Placement, Shuf, TraAgg, TraConcat,
-                             TraInput, TraJoin, TraNode, TraReKey,
-                             TraTransform)
+                             LocalJoin, Placement, Shuf, TraNode)
 from repro.core.tra import RelType
 
 S = ("sites",)
@@ -27,12 +32,9 @@ S = ("sites",)
 # ==========================================================================
 
 def matmul_tra(fa: Tuple[int, int], fb: Tuple[int, int],
-               ba: Tuple[int, int], bb: Tuple[int, int]) -> TraNode:
-    """C = A @ B over chunked relations."""
-    ta = TraInput("A", RelType(fa, ba))
-    tb = TraInput("B", RelType(fb, bb))
-    return TraAgg(TraJoin(ta, tb, (1,), (0,), get_kernel("matMul")),
-                  (0, 2), get_kernel("matAdd"))
+               ba: Tuple[int, int], bb: Tuple[int, int]) -> Expr:
+    """C = A @ B over chunked relations — the §2.1 running example."""
+    return E.input("A", fa, ba) @ E.input("B", fb, bb)
 
 
 def bmm_plan(fa, fb, ba, bbnd) -> IANode:
@@ -129,8 +131,8 @@ def rmm_cost(fa, fb, ba, bbnd, sites: int, accounting: str = "paper") -> int:
 
 @dataclasses.dataclass
 class NNSearchProgram:
-    dist: TraNode            # (nblocks,)-keyed distance blocks
-    result: TraNode          # single (val, idx) pair after concat+argmin
+    dist: Expr               # (nblocks,)-keyed distance blocks
+    result: Expr             # single (val, idx) pair after concat+argmin
 
 
 def nn_search_tra(n_blocks: int, d_blocks: int, rows: int, dcol: int
@@ -139,32 +141,30 @@ def nn_search_tra(n_blocks: int, d_blocks: int, rows: int, dcol: int
 
     Relations: R_xq keyed (d,) bound (1, dcol); R_X keyed (n, d) bound
     (rows, dcol); R_A keyed (d, d) bound (dcol, dcol).
-    """
-    rxq = TraInput("xq", RelType((d_blocks,), (1, dcol)))
-    rx = TraInput("X", RelType((n_blocks, d_blocks), (rows, dcol)))
-    ra = TraInput("A", RelType((d_blocks, d_blocks), (dcol, dcol)))
 
-    # R_diff[n, d] = X − xq  (join on the feature-block key)
-    diff = TraJoin(rxq, rx, (0,), (1,), get_kernel("matVecSub"))
-    # keys now (d, n) — reorder to (n, d)
-    diff = TraReKey(diff, lambda k: (k[1], k[0]), tag="swap")
+    ``dist`` is shared between the returned roots — with the Expr DAG it
+    is evaluated once even when both are computed in one engine run.
+    """
+    rxq = E.input("xq", (d_blocks,), (1, dcol))
+    rx = E.input("X", (n_blocks, d_blocks), (rows, dcol))
+    ra = E.input("A", (d_blocks, d_blocks), (dcol, dcol))
+
+    # R_diff[n, d] = X − xq  (join on the feature-block key); keys arrive
+    # (d, n) — reorder to (n, d)
+    diff = rxq.join(rx, on=((0,), (1,)), kernel="matVecSub") \
+              .rekey(lambda k: (k[1], k[0]), tag="swap")
 
     # R_proj[n, d'] = Σ_d diff · A
-    proj = TraAgg(TraJoin(diff, ra, (1,), (0,), get_kernel("matMul")),
-                  (0, 2), get_kernel("matAdd"))
+    proj = diff @ ra
 
-    # R_dist[n] = rowSum(proj ⊙ diff)
-    had = TraJoin(proj, diff, (0, 1), (0, 1), get_kernel("elemMul"))
-    dist = TraTransform(TraAgg(had, (0, 1), get_kernel("matAdd")),
-                        get_kernel("rowSum"))
-    # dist keys (n, d→gone?) — agg grouped (0,1) keeps both; rowSum drops
-    # the col dim of the block.  Re-aggregate over d to a (n,)-keyed rel:
-    dist = TraAgg(dist, (0,), get_kernel("matAdd"))
+    # R_dist[n] = rowSum(proj ⊙ diff); agg grouped (0,1) keeps both key
+    # dims and rowSum drops the col dim of the block — re-aggregate over
+    # d to a (n,)-keyed relation
+    dist = (proj * diff).agg((0, 1), "matAdd").map("rowSum").sum(0)
 
     # global argmin: concatenate the blocks and take (val, idx) once —
     # indices are then global by construction
-    whole = TraConcat(dist, 0, 0)
-    result = TraTransform(whole, make_to_val_idx(rows * n_blocks))
+    result = dist.concat(0, 0).map(make_to_val_idx(rows * n_blocks))
     return NNSearchProgram(dist, result)
 
 
@@ -176,9 +176,9 @@ def nn_search_tra(n_blocks: int, d_blocks: int, rows: int, dcol: int
 class FFNNProgram:
     """One SGD step: inputs X, Y, W1, W2 → outputs W1', W2'."""
 
-    w1_new: TraNode
-    w2_new: TraNode
-    a2: TraNode
+    w1_new: Expr
+    w2_new: Expr
+    a2: Expr
 
 
 def ffnn_step_tra(nb: int, db: int, hb: int, lb: int,
@@ -187,19 +187,18 @@ def ffnn_step_tra(nb: int, db: int, hb: int, lb: int,
     """Paper §5.3 verbatim (with relu/sigmoid activations).
 
     Key grids: X (nb, db), Y (nb, lb), W1 (db, hb), W2 (hb, lb); block
-    bounds (bn, bd) etc.
+    bounds (bn, bd) etc.  The three roots share ``a1``/``a2``/``d_a2`` as
+    DAG nodes, so one engine run over ``(w1_new, w2_new, a2)`` evaluates
+    the forward pass once.
     """
-    mm, add = get_kernel("matMul"), get_kernel("matAdd")
-    rx = TraInput("X", RelType((nb, db), (bn, bd)))
-    ry = TraInput("Y", RelType((nb, lb), (bn, bl)))
-    rw1 = TraInput("W1", RelType((db, hb), (bd, bh)))
-    rw2 = TraInput("W2", RelType((hb, lb), (bh, bl)))
+    rx = E.input("X", (nb, db), (bn, bd))
+    ry = E.input("Y", (nb, lb), (bn, bl))
+    rw1 = E.input("W1", (db, hb), (bd, bh))
+    rw2 = E.input("W2", (hb, lb), (bh, bl))
 
     # forward
-    a1 = TraTransform(TraAgg(TraJoin(rx, rw1, (1,), (0,), mm), (0, 2), add),
-                      get_kernel("relu"))
-    a2 = TraTransform(TraAgg(TraJoin(a1, rw2, (1,), (0,), mm), (0, 2), add),
-                      get_kernel("sigmoid"))
+    a1 = (rx @ rw1).map("relu")
+    a2 = (a1 @ rw2).map("sigmoid")
 
     # backward.  NOTE an erratum in the paper's §5.3 expressions: the
     # weight-gradient aggregations are written Σ_(⟨0,2⟩,·) like the matmul
@@ -207,22 +206,19 @@ def ffnn_step_tra(nb: int, db: int, hb: int, lb: int,
     # block), so TRA-correct group-by keys are ⟨1,2⟩ — otherwise the
     # output would stay keyed by batch block.  (Verified against a direct
     # jnp implementation of the same SGD step; see tests.)
-    d_a2 = TraJoin(a2, ry, (0, 1), (0, 1), get_kernel("matSub"))
-    g_w2 = TraAgg(TraJoin(a1, d_a2, (0,), (0,), get_kernel("matTranMulL")),
-                  (1, 2), add)
-    d_a1_1 = TraAgg(TraJoin(d_a2, rw2, (1,), (1,),
-                            get_kernel("matTranMulR")), (0, 2), add)
-    d_a1 = TraJoin(TraTransform(a1, get_kernel("reluGrad")), d_a1_1,
-                   (0, 1), (0, 1), get_kernel("elemMul"))
-    g_w1 = TraAgg(TraJoin(rx, d_a1, (0,), (0,), get_kernel("matTranMulL")),
-                  (1, 2), add)
+    d_a2 = a2 - ry
+    g_w2 = a1.join(d_a2, on=((0,), (0,)),
+                   kernel="matTranMulL").agg((1, 2), "matAdd")
+    d_a1_1 = d_a2.join(rw2, on=((1,), (1,)),
+                       kernel="matTranMulR").agg((0, 2), "matAdd")
+    d_a1 = a1.map("reluGrad") * d_a1_1
+    g_w1 = rx.join(d_a1, on=((0,), (0,)),
+                   kernel="matTranMulL").agg((1, 2), "matAdd")
 
     # update
     scale = make_scale_mul(eta)
-    w2_new = TraJoin(rw2, TraTransform(g_w2, scale), (0, 1), (0, 1),
-                     get_kernel("matSub"))
-    w1_new = TraJoin(rw1, TraTransform(g_w1, scale), (0, 1), (0, 1),
-                     get_kernel("matSub"))
+    w2_new = rw2 - g_w2.map(scale)
+    w1_new = rw1 - g_w1.map(scale)
     return FFNNProgram(w1_new, w2_new, a2)
 
 

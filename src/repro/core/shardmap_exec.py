@@ -24,11 +24,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import tra
-from repro.core.interp import _pspec_for
+from repro.core.interp import _pspec_for, _warn_deprecated
 from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
                              LocalConcat, LocalFilter, LocalJoin, LocalMap,
-                             LocalTile, Placement, Shuf, TypeInfo, infer,
-                             postorder)
+                             LocalTile, Placement, Shuf, TypeInfo, as_node,
+                             infer, postorder)
 from repro.core.tra import RelType, TensorRelation
 
 if hasattr(jax, "shard_map"):
@@ -51,31 +51,70 @@ def _local_rtype(info: TypeInfo, mesh: Mesh) -> RelType:
     return RelType(tuple(ks), info.rtype.bound, info.rtype.dtype)
 
 
+def _cross_site_reduce(x: jax.Array, ax: str, kernel_name: Optional[str]
+                       ) -> jax.Array:
+    """All-reduce the pending partials along mesh axis ``ax`` with the agg
+    kernel's combiner — the psum-equivalent for every associative reducer.
+
+    ``matAdd`` is ``psum``, ``elemMax``/``elemMin`` are ``pmax``/``pmin``;
+    any other associative kernel (``elemMul`` → product, ``minIndex``, …)
+    gathers the per-site partials and folds them locally — same wire
+    volume as the ring all-reduce's gather phase, and semantically exact
+    because aggregation kernels are associative by construction.
+    """
+    if kernel_name in (None, "matAdd"):
+        return jax.lax.psum(x, ax)
+    if kernel_name == "elemMax":
+        return jax.lax.pmax(x, ax)
+    if kernel_name == "elemMin":
+        return jax.lax.pmin(x, ax)
+    from repro.core.kernels_registry import get_kernel
+    kern = get_kernel(kernel_name)
+    if not kern.is_associative:
+        raise NotImplementedError(
+            f"shard_map two-phase aggregation for kernel {kernel_name}")
+    stacked = jax.lax.all_gather(x, ax, axis=0, tiled=False)
+    if kern.reduce is not None:
+        return kern.reduce(stacked, (0,))
+    return tra._tree_fold(stacked, kern)
+
+
 def _resolve_dups(x: jax.Array, src: Placement, tgt: Optional[Placement],
                   mesh: Mesh) -> Tuple[jax.Array, Placement]:
-    """Reduce pending duplicate-key partials (R2-5's second phase)."""
+    """Reduce pending duplicate-key partials (R2-5's second phase).
+
+    Additive reducers scatter straight through ``psum_scatter``
+    (reduce-scatter); other associative reducers all-reduce via
+    :func:`_cross_site_reduce` and, when the target placement partitions a
+    dim along the dup axis, slice their local window afterwards — the same
+    final placement at the cost of the all-reduce's extra gather.
+    """
     if not src.dup_axes:
         return x, src
-    if src.dup_kernel not in ("matAdd", None):
-        # only additive reductions map onto psum/psum_scatter
-        raise NotImplementedError(
-            f"shard_map two-phase aggregation for kernel {src.dup_kernel}")
     remaining_dups = list(src.dup_axes)
-    scattered = []            # (dim, axis) pairs actually reduce-scattered
+    scattered = []            # (dim, axis) pairs landing partitioned
     if tgt is not None and tgt.kind == "partitioned":
         for d, ax in zip(tgt.dims, tgt.axes):
             if ax in remaining_dups:
-                if x.shape[d] % mesh.shape[ax] == 0:
-                    # reduce-scatter: sum partials over ax, scatter along d
-                    x = jax.lax.psum_scatter(x, ax, scatter_dimension=d,
-                                             tiled=True)
+                size = mesh.shape[ax]
+                if x.shape[d] % size == 0:
+                    if src.dup_kernel in (None, "matAdd"):
+                        # reduce-scatter: sum over ax, scatter along d
+                        x = jax.lax.psum_scatter(
+                            x, ax, scatter_dimension=d, tiled=True)
+                    else:
+                        x = _cross_site_reduce(x, ax, src.dup_kernel)
+                        local = x.shape[d] // size
+                        idx = jax.lax.axis_index(ax)
+                        x = jax.lax.dynamic_slice_in_dim(
+                            x, idx * local, local, axis=d)
                     scattered.append((d, ax))
                 else:
                     # fall back to all-reduce; the caller's _move slices
-                    x = jax.lax.psum(x, ax)
+                    x = _cross_site_reduce(x, ax, src.dup_kernel)
                 remaining_dups.remove(ax)
     for ax in remaining_dups:
-        x = jax.lax.psum(x, ax)
+        x = _cross_site_reduce(x, ax, src.dup_kernel)
     dims = list(src.dims) + [d for d, _ in scattered]
     axes = list(src.axes) + [ax for _, ax in scattered]
     return x, Placement.partitioned(dims, axes)
@@ -105,10 +144,11 @@ def _move(x: jax.Array, src: Placement, tgt: Placement,
     return x
 
 
-def execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
-                     mesh: Mesh) -> TensorRelation:
+def _execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
+                      mesh: Mesh) -> TensorRelation:
     """Execute a physical plan with explicit collectives; returns the global
     relation (gathered back according to the plan's final placement)."""
+    root = as_node(root)
     cache: Dict[int, TypeInfo] = {}
     out_info = infer(root, cache=cache)
     inputs = [n for n in postorder(root) if isinstance(n, IAInput)]
@@ -240,6 +280,14 @@ def execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
     arrays = [env[n].data for n in names]
     out = fn(*arrays)
     return TensorRelation(out, out_info.rtype)
+
+
+def execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
+                     mesh: Mesh) -> TensorRelation:
+    """Deprecated shim — use ``Engine(mesh, executor="shard_map").run``."""
+    _warn_deprecated("execute_shardmap",
+                     'Engine(mesh, executor="shard_map").run')
+    return _execute_shardmap(root, env, mesh)
 
 
 def _align_join_windows(node, lt: TypeInfo, rt: TypeInfo,

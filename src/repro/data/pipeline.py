@@ -30,6 +30,7 @@ class DataConfig:
     seed: int = 0
     zipf_alpha: float = 1.1
     grammar_frac: float = 0.5      # fraction of rows from the recurrence
+    grammar_families: int = 4      # distinct (a, b) recurrences in the mix
     input_mode: str = "tokens"     # tokens | embeddings
     d_model: int = 0               # for embeddings mode
 
@@ -45,10 +46,25 @@ def _zipf_rows(rng: np.random.Generator, n: int, cfg: DataConfig
 
 def _grammar_rows(rng: np.random.Generator, n: int, cfg: DataConfig
                   ) -> np.ndarray:
-    """x_{t+1} = (a·x_t + b) mod V with per-row (a, b) — learnable."""
+    """x_{t+1} = (a·x_t + b) mod V, (a, b) from a small per-dataset family.
+
+    The family is a pure function of ``cfg.seed`` (NOT the per-batch rng),
+    so every batch on every host draws from the same ``grammar_families``
+    recurrences.  This is what makes the stream learnable by sequence
+    statistics: p(x_{t+1} | x_t) concentrates on ≤ ``grammar_families``
+    values.  (Drawing a fresh uniform ``b`` per row — the earlier behaviour
+    — makes that conditional *exactly* uniform over V, so only in-context
+    regression of (a, b) could beat chance and short smoke runs sat flat
+    at ln V.)
+    """
     v = cfg.vocab_size
-    a = rng.integers(2, 8, size=(n, 1))
-    b = rng.integers(0, v, size=(n, 1))
+    fam_rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, 0xFA311]))
+    fams = np.stack([fam_rng.integers(2, 8, size=cfg.grammar_families),
+                     fam_rng.integers(0, v, size=cfg.grammar_families)],
+                    axis=1)
+    pick = rng.integers(0, cfg.grammar_families, size=n)
+    a, b = fams[pick, 0:1], fams[pick, 1:2]
     x = np.empty((n, cfg.seq_len + 1), np.int64)
     x[:, 0] = rng.integers(0, v, size=n)
     for t in range(cfg.seq_len):

@@ -4,6 +4,10 @@ Invoked by tests/test_distributed_exec.py (which asserts exit code 0) so
 that the main pytest process keeps the default single-device view, per the
 project rule that only the dry-run (and these isolated checks) fake a
 device count.
+
+Everything routes through the unified :class:`repro.core.Engine` — the
+same ``Expr`` runs on the shard_map and GSPMD executors and is compared
+against the single-device reference engine.
 """
 import os
 
@@ -13,13 +17,10 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import (Placement, RelType, TraAgg, TraInput, TraJoin,  # noqa: E402
-                        compile_tra, from_tensor, get_kernel, jit_ia_plan,
-                        optimize, to_tensor)
-from repro.core.shardmap_exec import execute_shardmap  # noqa: E402
-from repro.core.interp import evaluate_ia  # noqa: E402
-
-
+import repro.core as tra  # noqa: E402
+from repro.core import (Engine, IAInput, LocalAgg, LocalJoin, Placement,  # noqa: E402
+                        RelType, Shuf, from_tensor, fuse_join_agg,
+                        get_kernel, to_tensor)
 from repro.launch.mesh import make_mesh  # noqa: E402
 
 
@@ -31,11 +32,10 @@ def mesh2d():
     return make_mesh((4, 2), ("s0", "s1"))
 
 
-def matmul_plan(fl, fr, bl, br):
-    ta = TraInput("A", RelType(fl, bl))
-    tb = TraInput("B", RelType(fr, br))
-    return TraAgg(TraJoin(ta, tb, (1,), (0,), get_kernel("matMul")),
-                  (0, 2), get_kernel("matAdd"))
+def matmul_expr(fl, fr, bl, br):
+    a = tra.input("A", fl, bl)
+    b = tra.input("B", fr, br)
+    return a @ b
 
 
 def check_shardmap_strategies():
@@ -43,7 +43,7 @@ def check_shardmap_strategies():
     A = jax.random.normal(jax.random.PRNGKey(0), (32, 64), jnp.float32)
     B = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32)
     RA, RB = from_tensor(A, (4, 8)), from_tensor(B, (8, 4))
-    plan = matmul_plan((8, 8), (8, 8), (4, 8), (8, 4))
+    expr = matmul_expr((8, 8), (8, 8), (4, 8), (8, 4))
     S = ("sites",)
     for name, places in [
         ("BMM", {"A": Placement.replicated(),
@@ -53,16 +53,17 @@ def check_shardmap_strategies():
         ("rows", {"A": Placement.partitioned((0,), S),
                   "B": Placement.partitioned((0,), S)}),
     ]:
-        r = optimize(plan, places, S, {"sites": 8})
-        out = execute_shardmap(r.plan, {"A": RA, "B": RB}, mesh)
+        eng = Engine(mesh, executor="shard_map", input_placements=places)
+        compiled = eng.compile(expr)
+        out = compiled.run(A=RA, B=RB)
         np.testing.assert_allclose(np.asarray(to_tensor(out)),
                                    np.asarray(A @ B), rtol=2e-4, atol=2e-4)
         # Table-1 default plan must agree too
-        ia = compile_tra(plan, places)
-        out2 = execute_shardmap(ia, {"A": RA, "B": RB}, mesh)
+        out2 = Engine(mesh, executor="shard_map", optimize=False,
+                      input_placements=places).run(expr, A=RA, B=RB)
         np.testing.assert_allclose(np.asarray(to_tensor(out2)),
                                    np.asarray(A @ B), rtol=2e-4, atol=2e-4)
-        print(f"  shard_map {name}: OK (cost {r.cost})")
+        print(f"  shard_map {name}: OK (cost {compiled.cost})")
 
 
 def check_rmm_2d_mesh():
@@ -70,14 +71,15 @@ def check_rmm_2d_mesh():
     A = jax.random.normal(jax.random.PRNGKey(2), (32, 64), jnp.float32)
     B = jax.random.normal(jax.random.PRNGKey(3), (64, 32), jnp.float32)
     RA, RB = from_tensor(A, (4, 8)), from_tensor(B, (8, 4))
-    plan = matmul_plan((8, 8), (8, 8), (4, 8), (8, 4))
+    expr = matmul_expr((8, 8), (8, 8), (4, 8), (8, 4))
     places = {"A": Placement.partitioned((0,), ("s0",)),
               "B": Placement.partitioned((1,), ("s1",))}
-    r = optimize(plan, places, ("s0", "s1"), {"s0": 4, "s1": 2})
-    out = execute_shardmap(r.plan, {"A": RA, "B": RB}, mesh)
+    eng = Engine(mesh, executor="shard_map", input_placements=places)
+    compiled = eng.compile(expr)
+    out = compiled.run(A=RA, B=RB)
     np.testing.assert_allclose(np.asarray(to_tensor(out)),
                                np.asarray(A @ B), rtol=2e-4, atol=2e-4)
-    print(f"  shard_map RMM 2-D mesh: OK (cost {r.cost})")
+    print(f"  shard_map RMM 2-D mesh: OK (cost {compiled.cost})")
 
 
 def check_gspmd_matches_shardmap():
@@ -85,24 +87,28 @@ def check_gspmd_matches_shardmap():
     A = jax.random.normal(jax.random.PRNGKey(4), (32, 64), jnp.float32)
     B = jax.random.normal(jax.random.PRNGKey(5), (64, 32), jnp.float32)
     RA, RB = from_tensor(A, (4, 8)), from_tensor(B, (8, 4))
-    plan = matmul_plan((8, 8), (8, 8), (4, 8), (8, 4))
-    S = ("sites",)
-    places = {"A": Placement.partitioned((1,), S),
-              "B": Placement.partitioned((0,), S)}
-    r = optimize(plan, places, S, {"sites": 8})
-    fn, names = jit_ia_plan(r.plan, mesh)
-    got = fn(RA.data, RB.data)
-    want = execute_shardmap(r.plan, {"A": RA, "B": RB}, mesh)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want.data),
+    expr = matmul_expr((8, 8), (8, 8), (4, 8), (8, 4))
+    places = {"A": Placement.partitioned((1,), ("sites",)),
+              "B": Placement.partitioned((0,), ("sites",))}
+    gspmd = Engine(mesh, executor="gspmd", input_placements=places)
+    compiled = gspmd.compile(expr)
+    got = compiled.run(A=RA, B=RB)
+    want = Engine(mesh, executor="shard_map",
+                  input_placements=places).run(expr, A=RA, B=RB)
+    np.testing.assert_allclose(np.asarray(got.data), np.asarray(want.data),
                                rtol=2e-4, atol=2e-4)
     # the compiled GSPMD module must actually contain collectives
-    txt = fn.lower(jax.ShapeDtypeStruct((8, 8, 4, 8), jnp.float32),
-                   jax.ShapeDtypeStruct((8, 8, 8, 4), jnp.float32)) \
-        .compile().as_text()
+    sds = {"A": jax.ShapeDtypeStruct((8, 8, 4, 8), jnp.float32),
+           "B": jax.ShapeDtypeStruct((8, 8, 8, 4), jnp.float32)}
+    txt = compiled.jitted.lower(
+        *(sds[n] for n in compiled.input_names)).compile().as_text()
     assert any(k in txt for k in
                ("all-to-all", "all-reduce", "all-gather", "reduce-scatter",
                 "collective-permute")), "no collectives in compiled HLO"
-    print("  GSPMD == shard_map, collectives present: OK")
+    # engine compile cache: same structural expression → same artifact
+    assert gspmd.compile(matmul_expr((8, 8), (8, 8), (4, 8), (8, 4))) \
+        is compiled and gspmd.cache_hits == 1
+    print("  GSPMD == shard_map, collectives present, cache hit: OK")
 
 
 def check_two_phase_agg_is_reduce_scatter():
@@ -113,17 +119,68 @@ def check_two_phase_agg_is_reduce_scatter():
     A = jax.random.normal(jax.random.PRNGKey(6), (8, 128), jnp.float32)
     B = jax.random.normal(jax.random.PRNGKey(7), (128, 8), jnp.float32)
     RA, RB = from_tensor(A, (4, 8)), from_tensor(B, (8, 4))
-    plan = matmul_plan((2, 16), (16, 2), (4, 8), (8, 4))
-    S = ("sites",)
-    places = {"A": Placement.partitioned((1,), S),
-              "B": Placement.partitioned((0,), S)}
-    from repro.core import describe
-    r = optimize(plan, places, S, {"sites": 8})
-    assert "partial" in describe(r.plan), describe(r.plan)
-    out = execute_shardmap(r.plan, {"A": RA, "B": RB}, mesh)
+    expr = matmul_expr((2, 16), (16, 2), (4, 8), (8, 4))
+    places = {"A": Placement.partitioned((1,), ("sites",)),
+              "B": Placement.partitioned((0,), ("sites",))}
+    compiled = Engine(mesh, executor="shard_map",
+                      input_placements=places).compile(expr)
+    assert "partial" in compiled.describe(), compiled.describe()
+    out = compiled.run(A=RA, B=RB)
     np.testing.assert_allclose(np.asarray(to_tensor(out)),
                                np.asarray(A @ B), rtol=2e-4, atol=2e-4)
     print("  two-phase aggregation (reduce-scatter) OK")
+
+
+def check_two_phase_other_reducers():
+    """Two-phase (partial + SHUF/BCAST) plans for the non-additive
+    reducers must run in shard_map mode via the psum-equivalents
+    (pmax/pmin, gather+fold for products) — parametrized over kernels."""
+    mesh = mesh1d()
+    S = ("sites",)
+    fa, fb = (8, 16), (16, 8)
+    ba = bb = (4, 4)
+    A = jax.random.uniform(jax.random.PRNGKey(8),
+                           (fa[0] * ba[0], fa[1] * ba[1]), jnp.float32,
+                           0.5, 1.5)
+    B = jax.random.uniform(jax.random.PRNGKey(9),
+                           (fb[0] * bb[0], fb[1] * bb[1]), jnp.float32,
+                           0.5, 1.5)
+    RA, RB = from_tensor(A, ba), from_tensor(B, bb)
+    places = {"A": Placement.partitioned((1,), S),
+              "B": Placement.partitioned((0,), S)}
+    ref_eng = Engine(executor="reference", optimize=False)
+
+    for agg_name in ("elemMax", "elemMin", "elemMul"):
+        a = tra.input("A", fa, ba)
+        b = tra.input("B", fb, bb)
+        expr = a.join(b, on=((1,), (0,)), kernel="elemMul") \
+                .agg((0, 2), agg_name)
+        want = ref_eng.run(expr, A=RA, B=RB)
+
+        # hand-built two-phase plan: co-partitioned local join, partial
+        # local agg (pending duplicates over the contraction axis), SHUF
+        ia = IAInput("A", RelType(fa, ba), places["A"])
+        ib = IAInput("B", RelType(fb, bb), places["B"])
+        j = LocalJoin(ia, ib, (1,), (0,), get_kernel("elemMul"))
+        partial = LocalAgg(j, (0, 2), get_kernel(agg_name), partial=True)
+        plan = Shuf(partial, (0,), S)
+        sm = Engine(mesh, executor="shard_map")
+        got = sm.run(plan, A=RA, B=RB)
+        np.testing.assert_allclose(np.asarray(got.data),
+                                   np.asarray(want.data),
+                                   rtol=2e-4, atol=2e-4)
+
+        # the fuse rewrite must now offer the two-phase fused form for
+        # non-additive reducers too, and it must execute identically
+        unfused = LocalAgg(Shuf(j, (0,), S), (0, 2), get_kernel(agg_name))
+        fused = fuse_join_agg(unfused)
+        assert "FusedJoinAgg" in tra.describe(fused), tra.describe(fused)
+        assert "[partial]" in tra.describe(fused), tra.describe(fused)
+        got2 = sm.run(fused, A=RA, B=RB)
+        np.testing.assert_allclose(np.asarray(got2.data),
+                                   np.asarray(want.data),
+                                   rtol=2e-4, atol=2e-4)
+        print(f"  two-phase {agg_name} via psum-equivalent OK")
 
 
 if __name__ == "__main__":
@@ -132,4 +189,5 @@ if __name__ == "__main__":
     check_rmm_2d_mesh()
     check_gspmd_matches_shardmap()
     check_two_phase_agg_is_reduce_scatter()
+    check_two_phase_other_reducers()
     print("ALL DISTRIBUTED CHECKS PASSED")

@@ -1,0 +1,364 @@
+"""Frontend tests: lazy Expr API + unified Engine entry point.
+
+Covers the acceptance criteria of the API redesign:
+* Expr ↔ hand-built-plan equivalence on the §5 workloads (BMM/CPMM/RMM);
+* shared-subexpression DAGs evaluated once (kernel-invocation counting);
+* build-time shape errors (raised at construction, with context);
+* engine compile-cache hits;
+* einsum routed through the same builder;
+* deprecated shims still matching the Engine path.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as tra
+from repro.core import (Engine, ExprTypeError, Kernel, Placement, RelType,
+                        TraAgg, TraInput, TraJoin, from_tensor, get_kernel,
+                        optimize, to_tensor)
+from repro.core.programs import (bmm_plan, cpmm_plan, ffnn_step_tra,
+                                 matmul_tra, nn_search_tra)
+
+S = ("sites",)
+
+
+def _mats(i=32, k=64, j=32, bi=8, bk=8, bj=8):
+    A = jax.random.normal(jax.random.PRNGKey(0), (i, k))
+    B = jax.random.normal(jax.random.PRNGKey(1), (k, j))
+    return A, B, from_tensor(A, (bi, bk)), from_tensor(B, (bk, bj))
+
+
+# ==========================================================================
+# Expr ↔ hand-built plan equivalence on the §5.1 workloads
+# ==========================================================================
+
+PLACEMENTS = {
+    "BMM": {"A": Placement.replicated(),
+            "B": Placement.partitioned((0,), S)},
+    "CPMM": {"A": Placement.partitioned((1,), S),
+             "B": Placement.partitioned((0,), S)},
+    "RMM-rows": {"A": Placement.partitioned((0,), S),
+                 "B": Placement.partitioned((0,), S)},
+}
+
+
+@pytest.mark.parametrize("strategy", sorted(PLACEMENTS))
+def test_expr_matches_hand_built_plan(strategy):
+    A, B, RA, RB = _mats()
+    fa = fb = (4, 8)
+
+    expr = tra.input("A", (4, 8), (8, 8)) @ tra.input("B", (8, 4), (8, 8))
+    hand = TraAgg(TraJoin(TraInput("A", RelType((4, 8), (8, 8))),
+                          TraInput("B", RelType((8, 4), (8, 8))),
+                          (1,), (0,), get_kernel("matMul")),
+                  (0, 2), get_kernel("matAdd"))
+    places = PLACEMENTS[strategy]
+    # the optimizer must price and pick identically for both forms
+    r_expr = optimize(expr, places, S, {"sites": 4})
+    r_hand = optimize(hand, places, S, {"sites": 4})
+    assert r_expr.cost == r_hand.cost
+    assert tra.describe(r_expr.plan) == tra.describe(r_hand.plan)
+
+    # and execution through the engine matches the legacy walk + numpy
+    eng = Engine(executor="jit", input_placements=places,
+                 axis_sizes={"sites": 4})
+    got = eng.run(expr, A=RA, B=RB)
+    np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                               np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("plan_fn", [bmm_plan, cpmm_plan])
+def test_engine_runs_hand_built_physical_plans(plan_fn):
+    A, B, RA, RB = _mats()
+    plan = plan_fn((4, 8), (8, 4), (8, 8), (8, 8))
+    got = Engine(executor="reference").run(plan, A=RA, B=RB)
+    np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                               np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+
+
+def test_rmm_two_axis_placement_equivalence():
+    A, B, RA, RB = _mats()
+    expr = matmul_tra((4, 8), (8, 4), (8, 8), (8, 8))
+    places = {"A": Placement.partitioned((0,), ("s0",)),
+              "B": Placement.partitioned((1,), ("s1",))}
+    eng = Engine(executor="jit", input_placements=places,
+                 site_axes=("s0", "s1"), axis_sizes={"s0": 2, "s1": 2})
+    got = eng.run(expr, A=RA, B=RB)
+    np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                               np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+
+
+def test_nn_search_and_ffnn_exprs_match_oracle():
+    """§5.2 / §5.3 programs: engine result == deprecated-oracle result."""
+    prog = nn_search_tra(4, 2, 8, 8)
+    Xs = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    xq = jax.random.normal(jax.random.PRNGKey(3), (1, 16))
+    Am = jnp.eye(16)
+    from repro.core import tra as tra_ops
+    env = {"xq": tra_ops.rekey(from_tensor(xq, (1, 8)), lambda k: (k[1],)),
+           "X": from_tensor(Xs, (8, 8)), "A": from_tensor(Am, (8, 8))}
+    got = Engine(executor="jit", optimize=False).run(prog.result, **env)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        want = tra.evaluate_tra(prog.result, env, fuse=False)
+    np.testing.assert_allclose(np.asarray(got.data), np.asarray(want.data),
+                               rtol=1e-4, atol=1e-4)
+
+    prog2 = ffnn_step_tra(2, 2, 2, 2, 4, 4, 4, 2)
+    env2 = {"X": from_tensor(jax.random.normal(jax.random.PRNGKey(4),
+                                               (8, 8)), (4, 4)),
+            "Y": from_tensor(jax.random.normal(jax.random.PRNGKey(5),
+                                               (8, 4)), (4, 2)),
+            "W1": from_tensor(jax.random.normal(jax.random.PRNGKey(6),
+                                                (8, 8)), (4, 4)),
+            "W2": from_tensor(jax.random.normal(jax.random.PRNGKey(7),
+                                                (8, 4)), (4, 2))}
+    w1n, w2n = Engine(executor="jit", optimize=False).run(
+        (prog2.w1_new, prog2.w2_new), **env2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        cache = {}
+        want1 = tra.evaluate_tra(prog2.w1_new, env2, cache)
+        want2 = tra.evaluate_tra(prog2.w2_new, env2, cache)
+    np.testing.assert_allclose(np.asarray(w1n.data), np.asarray(want1.data),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(w2n.data), np.asarray(want2.data),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ==========================================================================
+# Shared subexpressions: true DAGs evaluated once
+# ==========================================================================
+
+def _counting_kernel(counter):
+    def apply(a, b):
+        counter["calls"] += 1
+        return a + b
+
+    return Kernel(name="countAdd", arity=2, apply=apply,
+                  out_bound=lambda bl, br: tuple(bl),
+                  flops=lambda *bs: 0)
+
+
+def test_shared_subexpression_evaluated_once():
+    counter = {"calls": 0}
+    a = tra.input("A", (2, 2), (4, 4))
+    b = tra.input("B", (2, 2), (4, 4))
+    shared = a.join(b, on=(0, 1), kernel=_counting_kernel(counter))
+    expr = shared * shared            # the DAG reuses one node
+
+    RA = from_tensor(jnp.ones((8, 8)), (4, 4))
+    RB = from_tensor(jnp.ones((8, 8)) * 2, (4, 4))
+    eng = Engine(executor="reference", optimize=False)
+    out = eng.run(expr, A=RA, B=RB)
+    assert counter["calls"] == 1, counter
+    np.testing.assert_allclose(np.asarray(out.data), 9.0)
+
+    # two structurally identical but distinct nodes evaluate twice —
+    # identity, not structure, is what the DAG shares
+    counter2 = {"calls": 0}
+    k2 = _counting_kernel(counter2)
+    s1 = a.join(b, on=(0, 1), kernel=k2)
+    s2 = a.join(b, on=(0, 1), kernel=k2)
+    eng.run(s1 * s2, A=RA, B=RB)
+    assert counter2["calls"] == 2, counter2
+
+
+def test_multi_root_shares_forward_pass():
+    counter = {"calls": 0}
+    a = tra.input("A", (2, 2), (4, 4))
+    b = tra.input("B", (2, 2), (4, 4))
+    shared = a.join(b, on=(0, 1), kernel=_counting_kernel(counter))
+    r1 = shared.map("relu")
+    r2 = shared.sum(0)
+    out1, out2 = Engine(executor="reference", optimize=False).run(
+        (r1, r2), A=from_tensor(jnp.ones((8, 8)), (4, 4)),
+        B=from_tensor(jnp.ones((8, 8)), (4, 4)))
+    assert counter["calls"] == 1
+    assert out1.rtype.key_shape == (2, 2)
+    assert out2.rtype.key_shape == (2,)
+
+
+# ==========================================================================
+# Build-time shape errors
+# ==========================================================================
+
+def test_join_bound_mismatch_raises_at_build():
+    a = tra.input("A", (4, 4), (8, 8))
+    b = tra.input("B", (4, 4), (4, 4))       # incompatible matMul bounds
+    with pytest.raises(ExprTypeError, match="cannot build join"):
+        a.join(b, on=((1,), (0,)), kernel="matMul")
+
+
+def test_matmul_operator_checks_arity():
+    a = tra.input("A", (4,), (8, 8))
+    b = tra.input("B", (4, 4), (8, 8))
+    with pytest.raises(ExprTypeError, match="matrix-chunked"):
+        a @ b
+
+
+def test_keywise_operator_checks_key_arity():
+    a = tra.input("A", (4, 4), (8, 8))
+    b = tra.input("B", (4,), (8, 8))
+    with pytest.raises(ExprTypeError, match="key arity mismatch"):
+        a + b
+
+
+def test_agg_bad_group_by_raises_at_build():
+    a = tra.input("A", (4, 4), (8, 8))
+    with pytest.raises((ExprTypeError, IndexError)):
+        a.agg((0, 5), "matAdd")
+
+
+def test_einsum_operand_count_checked():
+    a = tra.input("A", (4, 4), (8, 8))
+    with pytest.raises(ExprTypeError, match="2 terms"):
+        tra.einsum("ij,jk->ik", a)
+
+
+def test_einsum_rank_checked():
+    a = tra.input("A", (4,), (8,))
+    b = tra.input("B", (4, 4), (8, 8))
+    with pytest.raises(ExprTypeError, match="needs 2 key dims"):
+        tra.einsum("ij,jk->ik", a, b)
+
+
+# ==========================================================================
+# Engine compile cache
+# ==========================================================================
+
+def test_compile_cache_hits_for_same_and_rebuilt_exprs():
+    eng = Engine(executor="jit")
+    e1 = matmul_tra((4, 4), (4, 4), (8, 8), (8, 8))
+    c1 = eng.compile(e1)
+    assert eng.compile(e1) is c1                      # same object
+    e2 = matmul_tra((4, 4), (4, 4), (8, 8), (8, 8))   # rebuilt, same shape
+    assert eng.compile(e2) is c1
+    assert (eng.cache_hits, eng.cache_misses) == (2, 1)
+    # a different shape misses
+    eng.compile(matmul_tra((2, 2), (2, 2), (8, 8), (8, 8)))
+    assert eng.cache_misses == 2
+
+
+def test_compile_cache_keyed_by_placements_and_executor():
+    e = matmul_tra((4, 4), (4, 4), (8, 8), (8, 8))
+    eng = Engine(executor="jit", axis_sizes={"sites": 4})
+    c1 = eng.compile(e)
+    c2 = eng.compile(e, input_placements=PLACEMENTS["CPMM"])
+    assert c1 is not c2
+    assert eng.cache_misses == 2
+    # run() goes through the same cache
+    A, B, RA, RB = _mats()
+    e3 = matmul_tra((4, 8), (8, 4), (8, 8), (8, 8))
+    eng.run(e3, A=RA, B=RB)
+    eng.run(e3, A=RA, B=RB)
+    assert eng.cache_hits >= 1
+
+
+def test_distinct_lambdas_never_share_cache_entries():
+    """Two filters with the same default tag but different predicates must
+    compile separately (identity is part of the signature)."""
+    a = tra.input("A", (4, 4), (8, 8))
+    e1 = a.filter(lambda k: k[0] < 2)
+    e2 = a.filter(lambda k: k[0] >= 1)
+    eng = Engine(executor="reference", optimize=False)
+    RA = from_tensor(jnp.ones((32, 32)), (8, 8))
+    o1 = eng.run(e1, A=RA)
+    o2 = eng.run(e2, A=RA)
+    assert eng.cache_misses == 2
+    assert o1.rtype.key_shape != o2.rtype.key_shape
+
+
+# ==========================================================================
+# einsum through the Expr builder
+# ==========================================================================
+
+@pytest.mark.parametrize("spec,shapes,tiles", [
+    ("ij,jk->ik", [(24, 32), (32, 16)], [(6, 8), (8, 4)]),
+    ("ij,jk,kl->il", [(8, 12), (12, 8), (8, 4)], [(4, 6), (6, 4), (4, 2)]),
+    ("ij,ij->ij", [(8, 12), (8, 12)], [(4, 6), (4, 6)]),
+])
+def test_einsum_expr_matches_jnp(spec, shapes, tiles):
+    keys = jax.random.split(jax.random.PRNGKey(0), len(shapes))
+    tensors = [jax.random.normal(k, s) for k, s in zip(keys, shapes)]
+    rels = [from_tensor(t, tile) for t, tile in zip(tensors, tiles)]
+    ops = [tra.input_like(f"T{i}", r.rtype) for i, r in enumerate(rels)]
+    expr = tra.einsum(spec, *ops)
+    env = {f"T{i}": r for i, r in enumerate(rels)}
+    got = Engine(executor="jit", optimize=False).run(expr, **env)
+    want = jnp.einsum(spec, *tensors)
+    np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                               np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+# ==========================================================================
+# Inputs and ergonomics
+# ==========================================================================
+
+def test_raw_array_inputs_are_coerced():
+    A, B, RA, RB = _mats()
+    expr = matmul_tra((4, 8), (8, 4), (8, 8), (8, 8))
+    got = Engine().run(expr, A=RA.data, B=RB.data)
+    np.testing.assert_allclose(np.asarray(to_tensor(got)),
+                               np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError, match="dense shape"):
+        Engine().run(expr, A=RA.data, B=jnp.ones((3, 3)))
+    with pytest.raises(ValueError, match="missing inputs"):
+        Engine().run(expr, A=RA.data)
+
+
+def test_staged_executors_reject_masked_inputs():
+    """jit/gspmd rebuild relations from raw arrays inside the artifact, so
+    a holey input would silently lose its mask — must raise instead."""
+    import numpy as onp
+    expr = matmul_tra((4, 4), (4, 4), (8, 8), (8, 8))
+    A, B, RA, RB = _mats(32, 32, 32)
+    mask = onp.ones((4, 4), bool)
+    mask[0, 0] = False
+    from repro.core import TensorRelation
+    holey = TensorRelation(RA.data, RA.rtype, mask)
+    with pytest.raises(NotImplementedError, match="mask"):
+        Engine(executor="jit").run(expr, A=holey, B=RB)
+    # the eager reference walk threads masks correctly
+    out = Engine(executor="reference", optimize=False).run(
+        expr, A=holey, B=RB)
+    assert out.mask is None        # matmul agg rejoins the full grid
+
+
+def test_multi_root_optimized_cost_sums_per_root():
+    prog = ffnn_step_tra(2, 2, 2, 2, 4, 4, 4, 2)
+    eng = Engine(executor="jit", axis_sizes={"sites": 2})
+    c_both = eng.compile((prog.w1_new, prog.w2_new))
+    c_w1 = eng.compile(prog.w1_new)
+    c_w2 = eng.compile(prog.w2_new)
+    assert c_both.cost == c_w1.cost + c_w2.cost
+    assert c_both.opt is None and c_w1.opt is not None
+
+
+def test_extra_inputs_rejected_uniformly():
+    A, B, RA, RB = _mats()
+    expr = matmul_tra((4, 8), (8, 4), (8, 8), (8, 8))
+    with pytest.raises(ValueError, match="unexpected inputs"):
+        Engine().run(expr, A=RA, B=RB, C=RA)        # TensorRelation extra
+    with pytest.raises(ValueError, match="unexpected inputs"):
+        Engine().run(expr, A=RA.data, B=RB.data, C=RA.data)  # raw extra
+
+
+def test_engine_rejects_unknown_executor_and_missing_mesh():
+    with pytest.raises(ValueError, match="unknown executor"):
+        Engine(executor="pmap")
+    expr = matmul_tra((4, 4), (4, 4), (8, 8), (8, 8))
+    with pytest.raises(ValueError, match="requires a mesh"):
+        Engine(executor="shard_map").compile(expr)
+
+
+def test_legacy_entry_points_accept_exprs_and_warn():
+    A, B, RA, RB = _mats()
+    expr = matmul_tra((4, 8), (8, 4), (8, 8), (8, 8))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        out = tra.evaluate_tra(expr, {"A": RA, "B": RB})
+    np.testing.assert_allclose(np.asarray(to_tensor(out)),
+                               np.asarray(A @ B), rtol=1e-4, atol=1e-4)

@@ -22,11 +22,13 @@ def _trainer(ckpt_dir, steps=10, arch="qwen2.5-14b"):
     return Trainer(cfg, dcfg, tcfg)
 
 
-@pytest.mark.xfail(
-    reason="pre-existing: loss stays flat (~5.85) over the 30-step smoke "
-           "on jax 0.4.x CPU; params update and grads flow, so this is a "
-           "training-dynamics issue tracked in ROADMAP open items",
-    strict=False)
+# Formerly xfailed with loss flat at ~5.85 ≈ ln(256): the root cause was
+# the data generator, not the model/loss — _grammar_rows drew a fresh
+# uniform (a, b) per row, making p(x_{t+1} | x_t) marginally uniform over
+# the vocab, i.e. unlearnable by sequence statistics at smoke scale.  The
+# pipeline now samples (a, b) from a small seed-derived family
+# (DataConfig.grammar_families), under which the same trainer drops the
+# loss by >1 nat in 30 steps.
 def test_loss_decreases_on_learnable_data():
     cfg = SMOKES["qwen2.5-14b"]
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
