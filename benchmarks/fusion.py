@@ -121,6 +121,60 @@ def bench_shape(name: str, I: int, K: int, J: int, s: int) -> Dict:
     return rec
 
 
+def bench_backward() -> Dict:
+    """Fused vs unfused **gradient** plan — the autodiff payoff.
+
+    Builds the §5.3 FFNN forward at the ffnn-fwd shape, derives ∂/∂W1 by
+    autodiff (`Expr.grad`), and runs the same gradient expression through
+    the optimizing engine (which selects the fused Σ∘⋈ contraction inside
+    the backward plan) and through the unfused oracle engine.  Because the
+    backward graph is plain TRA, the PR-1 fusion machinery applies to it
+    with zero backward-specific code — this record guards that.
+    """
+    import jax
+    import numpy as np
+
+    import repro.core as tra
+    from repro.core import Engine, from_tensor
+
+    I, K, J, s = SHAPES["ffnn-fwd"]
+    ba, bb = (I // s, K // s), (K // s, J // s)
+    X = jax.random.normal(jax.random.PRNGKey(0), (I, K))
+    W = jax.random.normal(jax.random.PRNGKey(1), (K, J)) * 0.1
+    RX, RW = from_tensor(X, ba), from_tensor(W, bb)
+
+    x = tra.input("X", (s, s), ba)
+    w = tra.input("W", (s, s), bb)
+    fwd = (x @ w).map("relu")
+    g_w = fwd.grad("W")                 # Σ∘⋈(matTranMulL) by construction
+
+    engines = {
+        "unfused": Engine(executor="jit", optimize=False, fuse=False),
+        "fused": Engine(executor="jit"),
+    }
+    rec: Dict = {"shape": "ffnn-bwd-dW", "I": I, "K": K, "J": J, "sites": s}
+    outs = {}
+    for tag, engine in engines.items():
+        ce = engine.compile(g_w)
+        args = [RX.data if n == "X" else RW.data for n in ce.input_names]
+        compiled = ce.jitted.lower(*args).compile()
+        ma = compiled.memory_analysis()
+        rec[f"{tag}_temp_bytes"] = \
+            int(ma.temp_size_in_bytes) if ma is not None else -1
+        rec[f"{tag}_ms"] = round(
+            _time_it(lambda: ce.run(X=RX, W=RW).data) * 1e3, 2)
+        outs[tag] = np.asarray(ce.run(X=RX, W=RW).data)
+    np.testing.assert_allclose(outs["fused"], outs["unfused"],
+                               rtol=1e-3, atol=1e-3 * I ** 0.5)
+    rec["fused_in_plan"] = "FusedJoinAgg" in engines["fused"] \
+        .compile(g_w).describe()
+    if rec["unfused_temp_bytes"] > 0 and rec["fused_temp_bytes"] > 0:
+        rec["temp_ratio"] = round(
+            rec["unfused_temp_bytes"] / rec["fused_temp_bytes"], 2)
+    rec["speedup"] = round(rec["unfused_ms"] / rec["fused_ms"], 2)
+    return rec
+
+
 def optimizer_selects_fused() -> bool:
     """agg(join(·, matMul), matAdd) must compile to FusedJoinAgg."""
     import repro.core as tra
@@ -136,9 +190,11 @@ def optimizer_selects_fused() -> bool:
 
 def run(mesh=None) -> List[str]:
     recs = [bench_shape(n, *args) for n, args in SHAPES.items()]
+    bwd = bench_backward()
     sel = optimizer_selects_fused()
     overhead = frontend_overhead()
-    out = {"shapes": recs, "optimizer_selects_fused": sel,
+    out = {"shapes": recs, "backward": bwd,
+           "optimizer_selects_fused": sel,
            "frontend_overhead": overhead,
            "temp_metric": "Compiled.memory_analysis().temp_size_in_bytes"}
     path = os.path.join(os.path.dirname(os.path.dirname(
@@ -154,6 +210,12 @@ def run(mesh=None) -> List[str]:
             f"(×{r.get('temp_ratio', float('nan')):.1f})  "
             f"wall {r['unfused_ms']:7.1f}→{r['fused_ms']:6.1f} ms "
             f"(×{r['speedup']:.1f})")
+    lines.append(
+        f"{bwd['shape']:18s} temp {bwd['unfused_temp_bytes']/1e6:8.1f}→"
+        f"{bwd['fused_temp_bytes']/1e6:7.1f} MB "
+        f"(×{bwd.get('temp_ratio', float('nan')):.1f})  "
+        f"wall {bwd['unfused_ms']:7.1f}→{bwd['fused_ms']:6.1f} ms "
+        f"(×{bwd['speedup']:.1f})  [autodiff backward]")
     lines.append(f"optimizer selects FusedJoinAgg: {sel}")
     lines.append(f"frontend dispatch overhead: {overhead['overhead_ms']} ms"
                  f" (raw {overhead['raw_ms']} → engine "
@@ -162,14 +224,20 @@ def run(mesh=None) -> List[str]:
     guard = next(r for r in recs if r["shape"] == GUARD_SHAPE)
     # temp ratio is deterministic → hard ≥5× bar at the guard shape;
     # wall-clock is noisy on shared CPU → fused must merely beat unfused,
-    # but on EVERY shape, so a slow optimizer-selected plan anywhere fails
+    # but on EVERY shape (including the autodiff backward record), so a
+    # slow optimizer-selected plan anywhere fails
     ok = (guard.get("temp_ratio", 0) >= GUARD_TEMP_RATIO
-          and all(r["fused_ms"] < r["unfused_ms"] for r in recs) and sel)
+          and all(r["fused_ms"] < r["unfused_ms"] for r in recs) and sel
+          and bwd["fused_in_plan"]
+          and bwd["fused_ms"] < bwd["unfused_ms"]
+          and bwd.get("temp_ratio", 0) > 1.0)
     lines.append(f"regression guard (≥{GUARD_TEMP_RATIO}× temp, fused "
-                 f"faster on all shapes, auto-selected, via Engine): "
+                 f"faster on all shapes incl. autodiff backward, "
+                 f"auto-selected, via Engine): "
                  f"{'PASS' if ok else 'FAIL'}")
     if not ok:
-        raise AssertionError(f"fusion regression guard failed: {recs}")
+        raise AssertionError(
+            f"fusion regression guard failed: {recs + [bwd]}")
     return lines
 
 

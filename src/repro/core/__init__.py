@@ -11,36 +11,44 @@ The supported user-facing API is the lazy frontend plus the engine:
 ``evaluate_tra`` / ``evaluate_ia`` / ``jit_ia_plan`` (and
 ``shardmap_exec.execute_shardmap``) remain as deprecated shims.
 """
-from repro.core.kernels_registry import (Kernel, compose, get_kernel,
-                                         register, registered_kernels)
+from repro.core.kernels_registry import (JoinVjp, Kernel, compose,
+                                         get_kernel, register,
+                                         registered_kernels)
 from repro.core.tra import (RelType, TensorRelation, can_fuse, from_tensor,
                             fused_join_agg, to_tensor)
-from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, LocalAgg,
+from repro.core.plan import (Bcast, FusedJoinAgg, IAConst, IAInput, LocalAgg,
                              LocalConcat, LocalFilter, LocalJoin, LocalMap,
-                             LocalTile, Placement, Shuf, TraAgg, TraConcat,
-                             TraFilter, TraInput, TraJoin, TraReKey, TraTile,
+                             LocalPad, LocalTile, Placement, Shuf, TraAgg,
+                             TraConcat, TraConst, TraFilter, TraInput,
+                             TraJoin, TraPad, TraReKey, TraTile,
                              TraTransform, as_node, check_valid, describe,
                              infer)
 from repro.core.compile import compile_tra
 from repro.core.cost import (CostReport, HardwareModel, TPU_V5E, comm_cost,
                              cost_plan)
 from repro.core.optimize import OptimizeResult, fuse_join_agg, optimize
-from repro.core.expr import (Expr, ExprTypeError, einsum, input,  # noqa: A004
-                             input_like, wrap)
+from repro.core.expr import (Expr, ExprTypeError, const, einsum,  # noqa: A004
+                             input, input_like, ones_like, wrap)
+from repro.core.autodiff import AutodiffError, grad
 from repro.core.engine import CompiledExpr, Engine
 from repro.core.interp import evaluate_ia, evaluate_tra, jit_ia_plan
 
 __all__ = [
-    "Kernel", "compose", "get_kernel", "register", "registered_kernels",
+    "JoinVjp", "Kernel", "compose", "get_kernel", "register",
+    "registered_kernels",
     "RelType", "TensorRelation", "can_fuse", "from_tensor",
     "fused_join_agg", "to_tensor",
-    "Bcast", "FusedJoinAgg", "IAInput", "LocalAgg", "LocalConcat",
-    "LocalFilter", "LocalJoin", "LocalMap", "LocalTile", "Placement", "Shuf",
-    "TraAgg", "TraConcat", "TraFilter", "TraInput", "TraJoin", "TraReKey",
-    "TraTile", "TraTransform", "as_node", "check_valid", "describe", "infer",
+    "Bcast", "FusedJoinAgg", "IAConst", "IAInput", "LocalAgg", "LocalConcat",
+    "LocalFilter", "LocalJoin", "LocalMap", "LocalPad", "LocalTile",
+    "Placement", "Shuf",
+    "TraAgg", "TraConcat", "TraConst", "TraFilter", "TraInput", "TraJoin",
+    "TraPad", "TraReKey", "TraTile", "TraTransform", "as_node",
+    "check_valid", "describe", "infer",
     "compile_tra", "CostReport", "HardwareModel", "TPU_V5E", "comm_cost",
     "cost_plan", "OptimizeResult", "fuse_join_agg", "optimize",
-    "Expr", "ExprTypeError", "einsum", "input", "input_like", "wrap",
+    "Expr", "ExprTypeError", "const", "einsum", "input", "input_like",
+    "ones_like", "wrap",
+    "AutodiffError", "grad",
     "CompiledExpr", "Engine",
     "evaluate_ia", "evaluate_tra", "jit_ia_plan",
 ]

@@ -17,10 +17,11 @@ from __future__ import annotations
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.kernels_registry import get_kernel
-from repro.core.plan import (Bcast, IAInput, IANode, LocalAgg, LocalConcat,
-                             LocalFilter, LocalJoin, LocalMap, LocalTile,
-                             Placement, Shuf, TraAgg, TraConcat, TraFilter,
-                             TraInput, TraJoin, TraNode, TraReKey, TraTile,
+from repro.core.plan import (Bcast, IAConst, IAInput, IANode, LocalAgg,
+                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
+                             LocalPad, LocalTile, Placement, Shuf, TraAgg,
+                             TraConcat, TraConst, TraFilter, TraInput,
+                             TraJoin, TraNode, TraPad, TraReKey, TraTile,
                              TraTransform, infer)
 
 
@@ -48,6 +49,14 @@ def compile_tra(node: TraNode,
     if isinstance(node, TraInput):
         out = IAInput(node.name, node.rtype,
                       placements.get(node.name, Placement.replicated()))
+    elif isinstance(node, TraConst):
+        out = IAConst(node.rtype, node.fill, Placement.replicated())
+    elif isinstance(node, TraPad):
+        child = rec(node.child)
+        if tuple(node.key_shape) != infer(node.child).rtype.key_shape:
+            # growing a frontier is only local on a replicated child
+            child = Bcast(child)
+        out = LocalPad(child, tuple(node.key_shape))
     elif isinstance(node, TraJoin):
         out = LocalJoin(Bcast(rec(node.left)), rec(node.right),
                         node.join_keys_l, node.join_keys_r, node.kernel)

@@ -45,7 +45,7 @@ import jax
 
 from repro.core import kernels_registry as kr
 from repro.core.compile import compile_tra
-from repro.core.interp import _evaluate_ia, _evaluate_tra, _jit_ia_plan
+from repro.core.interp import _evaluate_ia, _evaluate_tra, _jit_ia_plans
 from repro.core.optimize import OptimizeResult, optimize as _optimize
 from repro.core.plan import (IAInput, IANode, Placement, TraInput, TraNode,
                              TypeInfo, as_node, describe, infer, postorder)
@@ -88,6 +88,14 @@ def plan_sig(node) -> Tuple:
             if isinstance(n, P.IAInput):
                 sig += (n.placement.kind, n.placement.dims,
                         n.placement.axes, n.placement.dup_axes)
+        elif isinstance(n, (P.TraConst, P.IAConst)):
+            sig = ("const", n.rtype.key_shape, n.rtype.bound,
+                   str(n.rtype.dtype), n.fill)
+            if isinstance(n, P.IAConst):
+                sig += (n.placement.kind, n.placement.dims,
+                        n.placement.axes, n.placement.dup_axes)
+        elif isinstance(n, (P.TraPad, P.LocalPad)):
+            sig = ("pad", rec(n.child), n.key_shape)
         elif isinstance(n, (P.TraJoin, P.LocalJoin)):
             sig = ("join", rec(n.left), rec(n.right), n.join_keys_l,
                    n.join_keys_r, _kernel_sig(n.kernel))
@@ -157,6 +165,9 @@ class CompiledExpr:
     # for .lower()/.compile() dry-runs, memory analysis and HLO inspection
     jitted: Optional[Callable] = None
     input_names: Optional[Tuple[str, ...]] = None
+    # set by Engine.value_and_grad: names of the wrt inputs whose gradients
+    # follow the value in the run() tuple
+    grad_wrt: Optional[Tuple[str, ...]] = None
 
     @property
     def plan(self):
@@ -262,6 +273,12 @@ class Engine:
     try_logical_rewrites:
         Optimizer configuration, defaulted from ``mesh`` when given
         (1-site ``("sites",)`` otherwise).
+    chunk:
+        Grid slices materialized per step of the chunked fused-Σ∘⋈
+        streaming reduction (the non-contraction kernel pairs).  ``None``
+        (default) derives a per-shape value from
+        :data:`repro.core.tra.DEFAULT_CHUNK_BYTES`; ``compile(...,
+        chunk=...)`` overrides per expression.
     """
 
     def __init__(self, mesh=None, executor: str = "auto",
@@ -271,14 +288,20 @@ class Engine:
                  axis_sizes: Optional[Dict[str, int]] = None,
                  accounting: str = "wire",
                  try_logical_rewrites: bool = True,
-                 fuse: bool = True):
+                 fuse: bool = True,
+                 chunk: Optional[int] = None):
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; choose from {EXECUTORS}")
+        if chunk is not None and chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.mesh = mesh
         self.executor = executor
         self.optimize = optimize
         self.fuse = fuse
+        # grid slices per streamed fused-reduction step; None derives a
+        # bytes-based default from tra.DEFAULT_CHUNK_BYTES
+        self.chunk = chunk
         self.accounting = accounting
         self.try_logical_rewrites = try_logical_rewrites
         self.input_placements = dict(input_placements or {})
@@ -311,31 +334,69 @@ class Engine:
 
     def compile(self, expr,
                 input_placements: Optional[Dict[str, Placement]] = None,
-                target: Optional[Placement] = None) -> CompiledExpr:
+                target: Optional[Placement] = None,
+                chunk: Optional[int] = None,
+                _grad_wrt: Optional[Tuple[str, ...]] = None) -> CompiledExpr:
         """Compile an expression for this engine's executor.
 
         ``input_placements`` (falling back to the engine-level default)
-        seed the optimizer; ``target`` constrains the result placement.
+        seed the optimizer; ``target`` constrains the result placement;
+        ``chunk`` overrides the engine-level fused-path chunk size.
         """
+        if chunk is not None and chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         multi = isinstance(expr, (tuple, list))
         roots = tuple(as_node(e) for e in (expr if multi else (expr,)))
         placements = dict(self.input_placements)
         placements.update(input_placements or {})
         executor = self._resolve_executor()
+        chunk = self.chunk if chunk is None else chunk
 
+        # _grad_wrt is part of the key so a value_and_grad artifact (which
+        # carries gradient semantics in .grad_wrt) never aliases a plain
+        # compile() of the structurally identical roots
         key = (tuple(plan_sig(r) for r in roots), executor, self.optimize,
                self.fuse, self.accounting, self.try_logical_rewrites,
                _placements_sig(placements),
                _placements_sig({"·": target} if target else None),
-               multi)
+               multi, chunk, _grad_wrt)
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
             return hit
         self.cache_misses += 1
-        compiled = self._compile(roots, placements, target, executor, multi)
+        compiled = self._compile(roots, placements, target, executor, multi,
+                                 chunk)
+        compiled.grad_wrt = _grad_wrt
         self._cache[key] = compiled
         return compiled
+
+    def value_and_grad(self, expr, wrt, seed=None,
+                       input_placements: Optional[Dict[str,
+                                                       Placement]] = None,
+                       chunk: Optional[int] = None) -> CompiledExpr:
+        """Compile ``(expr, *d expr/d wrt)`` as one multi-output program.
+
+        The gradient expressions are *derived* from the forward plan by
+        :mod:`repro.core.autodiff` (Tang et al. direction) and flow through
+        the same optimizer/executor stack as any expression — the fused
+        Σ∘⋈ selection applies to backward plans too.  ``wrt`` is a list of
+        input names (or input ``Expr`` handles); ``seed`` is the output
+        cotangent (default: ones — the gradient of the sum of every output
+        entry).  The returned artifact's ``run`` yields
+        ``(value, grad_0, grad_1, ...)`` in ``wrt`` order.
+        """
+        from repro.core.autodiff import grad as _grad
+        from repro.core.expr import Expr, wrap
+        if not isinstance(expr, Expr):
+            expr = wrap(as_node(expr))
+        wrt_list = list(wrt) if isinstance(wrt, (tuple, list)) else [wrt]
+        grads = _grad(expr, wrt=wrt_list, seed=seed)
+        names = tuple(w if isinstance(w, str) else w.node.name
+                      for w in wrt_list)
+        return self.compile((expr,) + tuple(grads),
+                            input_placements=input_placements,
+                            chunk=chunk, _grad_wrt=names)
 
     # -- internals ---------------------------------------------------------
     def _resolve_executor(self) -> str:
@@ -369,23 +430,20 @@ class Engine:
                 phys.append(compile_tra(r, placements, self.site_axes))
         return tuple(phys), tuple(opts)
 
-    def _compile(self, roots, placements, target, executor,
-                 multi) -> CompiledExpr:
+    def _compile(self, roots, placements, target, executor, multi,
+                 chunk) -> CompiledExpr:
         if executor in ("gspmd", "shard_map"):
             if self.mesh is None:
                 raise ValueError(f"executor {executor!r} requires a mesh")
-            if len(roots) != 1:
-                raise NotImplementedError(
-                    f"executor {executor!r} supports a single root; got "
-                    f"{len(roots)} (evaluate multi-output programs on "
-                    f'"reference"/"jit", or compile each root)')
             phys, opts = self._physical_roots(roots, placements, target)
             out_infos = tuple(infer(p) for p in phys)
             jfn = names = None
             if executor == "gspmd":
-                call, jfn, names = self._gspmd_call(phys[0])
+                call, jfn, names = self._gspmd_call(phys, out_infos, chunk)
             else:
-                call = self._shardmap_call(phys[0])
+                # the shard_map callable is built ONCE here; repeat runs of
+                # a cached artifact are pure dispatch (no rebuild)
+                call = self._shardmap_call(phys, chunk)
             return CompiledExpr(executor, phys, _input_nodes(phys),
                                 out_infos, call, opts, multi,
                                 jitted=jfn, input_names=names)
@@ -405,10 +463,11 @@ class Engine:
             outs = []
             for p in plans:
                 if isinstance(p, IANode):
-                    outs.append(_evaluate_ia(p, env, _cache=cache))
+                    outs.append(_evaluate_ia(p, env, _cache=cache,
+                                             chunk=chunk))
                 else:
                     outs.append(_evaluate_tra(p, env, cache,
-                                              fuse=self.fuse))
+                                              fuse=self.fuse, chunk=chunk))
             return tuple(outs)
 
         if executor == "reference":
@@ -432,20 +491,17 @@ class Engine:
         return CompiledExpr("jit", plans, rtypes, out_infos, call, opts,
                             multi, jitted=jfn, input_names=tuple(names))
 
-    def _gspmd_call(self, plan):
-        jfn, names = _jit_ia_plan(plan, self.mesh)
-        out_info = infer(plan)
+    def _gspmd_call(self, plans, out_infos, chunk):
+        jfn, names = _jit_ia_plans(plans, self.mesh, chunk=chunk)
 
         def call(env):
-            data = jfn(*(env[n].data for n in names))
-            return (TensorRelation(data, out_info.rtype, out_info.mask),)
+            datas = jfn(*(env[n].data for n in names))
+            return tuple(TensorRelation(d, oi.rtype, oi.mask)
+                         for d, oi in zip(datas, out_infos))
 
         return call, jfn, tuple(names)
 
-    def _shardmap_call(self, plan):
-        from repro.core.shardmap_exec import _execute_shardmap
-
-        def call(env):
-            return (_execute_shardmap(plan, env, self.mesh),)
-
+    def _shardmap_call(self, plans, chunk):
+        from repro.core.shardmap_exec import _build_shardmap
+        call, _, _ = _build_shardmap(plans, self.mesh, chunk=chunk)
         return call

@@ -37,9 +37,9 @@ from typing import Callable, Sequence, Tuple, Union
 import jax.numpy as jnp
 
 from repro.core.kernels_registry import Kernel, get_kernel
-from repro.core.plan import (TraAgg, TraConcat, TraFilter, TraInput, TraJoin,
-                             TraNode, TraReKey, TraTile, TraTransform,
-                             TypeInfo, infer)
+from repro.core.plan import (TraAgg, TraConcat, TraConst, TraFilter,
+                             TraInput, TraJoin, TraNode, TraPad, TraReKey,
+                             TraTile, TraTransform, TypeInfo, infer)
 from repro.core.tra import RelType
 
 KernelLike = Union[Kernel, str]
@@ -140,6 +140,30 @@ class Expr:
         return _build(TraConcat(self.node, key_dim, array_dim),
                       "concat", self)
 
+    def pad(self, key_shape: Sequence[int]) -> "Expr":
+        """Pad_(keyShape)(self) — densify to the full key grid (the dual
+        of σ: holes become zero tuples, the frontier grows)."""
+        return _build(TraPad(self.node, tuple(key_shape)), "pad", self)
+
+    # -- differentiation ---------------------------------------------------
+    def grad(self, wrt, seed: "Expr" = None):
+        """Cotangent expression(s) of ``self`` w.r.t. input(s) ``wrt``.
+
+        The backward graph is derived from this expression's plan by
+        :mod:`repro.core.autodiff` and is itself an ``Expr`` DAG — run it
+        on any executor, optimizer fusion included.  ``wrt`` is an input
+        name / input ``Expr`` (returns one ``Expr``) or a sequence of
+        them (returns a tuple); ``seed`` overrides the default ones
+        cotangent (∂Σ(out)/∂out).
+
+            >>> z = (x @ w).map("relu")
+            >>> dw = z.grad("W")                  # d Σ(relu(x@w)) / dW
+        """
+        from repro.core.autodiff import grad as _grad
+        single = isinstance(wrt, (str, Expr))
+        outs = _grad(self, [wrt] if single else list(wrt), seed=seed)
+        return outs[0] if single else outs
+
     # -- operator sugar ----------------------------------------------------
     def _keywise(self, other: "Expr", kernel: str) -> "Expr":
         other = _as_expr(other)
@@ -211,6 +235,21 @@ def input(name: str, key_shape: Sequence[int], bound: Sequence[int],
 def input_like(name: str, rtype: RelType) -> Expr:
     """A named logical input matching an existing :class:`RelType`."""
     return wrap(TraInput(name, rtype))
+
+
+def const(fill: float, key_shape: Sequence[int], bound: Sequence[int],
+          dtype=jnp.float32) -> Expr:
+    """A literal constant relation (every key maps to a ``fill`` array).
+
+    Materialized locally by every executor — zero communication cost."""
+    return wrap(TraConst(RelType(tuple(key_shape), tuple(bound), dtype),
+                         float(fill)))
+
+
+def ones_like(e: Expr) -> Expr:
+    """A ones constant typed like ``e`` — the default autodiff seed."""
+    e = _as_expr(e)
+    return wrap(TraConst(e.info.rtype, 1.0))
 
 
 def wrap(node: TraNode) -> Expr:

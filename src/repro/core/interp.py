@@ -27,20 +27,26 @@ while oracle tests may keep calling them directly.
 from __future__ import annotations
 
 import warnings
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import tra
-from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
-                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
-                             LocalTile, Placement, Shuf, TraAgg, TraConcat,
-                             TraFilter, TraInput, TraJoin, TraNode, TraReKey,
-                             TraTile, TraTransform, as_node, children, infer,
+from repro.core.plan import (Bcast, FusedJoinAgg, IAConst, IAInput, IANode,
+                             LocalAgg, LocalConcat, LocalFilter, LocalJoin,
+                             LocalMap, LocalPad, LocalTile, Placement, Shuf,
+                             TraAgg, TraConcat, TraConst, TraFilter, TraInput,
+                             TraJoin, TraNode, TraPad, TraReKey, TraTile,
+                             TraTransform, as_node, children, infer,
                              postorder)
 from repro.core.tra import TensorRelation
+
+
+def _const_rel(rtype, fill: float) -> TensorRelation:
+    shape = tuple(rtype.key_shape) + tuple(rtype.bound)
+    return TensorRelation(jnp.full(shape, fill, rtype.dtype), rtype)
 
 
 def _warn_deprecated(old: str, new: str) -> None:
@@ -51,7 +57,8 @@ def _warn_deprecated(old: str, new: str) -> None:
 
 def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
                   _cache: Optional[dict] = None,
-                  fuse: bool = True) -> TensorRelation:
+                  fuse: bool = True,
+                  chunk: Optional[int] = None) -> TensorRelation:
     """Walk a logical plan with the dense eager ops.
 
     With ``fuse=True`` (default) every ``TraAgg(TraJoin(...))`` pair whose
@@ -59,6 +66,8 @@ def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
     Σ∘⋈ contraction — instead of materializing the join grid.  Joins with
     more than one consumer are exempt (they are computed once and cached).
     Pass ``fuse=False`` to force the unfused pair (the correctness oracle).
+    ``chunk`` forwards to the fused path's streaming reduction (``None`` =
+    bytes-based default).
     """
     node = as_node(node)
     cache = _cache if _cache is not None else {}
@@ -75,6 +84,10 @@ def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
             return cache[id(n)]
         if isinstance(n, TraInput):
             out = env[n.name]
+        elif isinstance(n, TraConst):
+            out = _const_rel(n.rtype, n.fill)
+        elif isinstance(n, TraPad):
+            out = tra.pad(rec(n.child), n.key_shape)
         elif isinstance(n, TraJoin):
             out = tra.join(rec(n.left), rec(n.right),
                            n.join_keys_l, n.join_keys_r, n.kernel)
@@ -85,7 +98,8 @@ def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
                     and tra.can_fuse(c.kernel, n.kernel):
                 out = tra.fused_join_agg(
                     rec(c.left), rec(c.right), c.join_keys_l,
-                    c.join_keys_r, c.kernel, n.group_by, n.kernel)
+                    c.join_keys_r, c.kernel, n.group_by, n.kernel,
+                    chunk=chunk)
             else:
                 out = tra.agg(rec(n.child), n.group_by, n.kernel)
         elif isinstance(n, TraReKey):
@@ -131,7 +145,8 @@ def _pspec_for(placement: Optional[Placement], rtype) -> P:
 def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
                  mesh: Optional[Mesh] = None,
                  spmd: bool = False,
-                 _cache: Optional[dict] = None) -> TensorRelation:
+                 _cache: Optional[dict] = None,
+                 chunk: Optional[int] = None) -> TensorRelation:
     """Evaluate a physical plan.
 
     With ``spmd=True`` (requires ``mesh``) every placement-bearing node gets
@@ -144,7 +159,7 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
         return cache[id(node)]
 
     def rec(n):
-        return _evaluate_ia(n, env, mesh, spmd, cache)
+        return _evaluate_ia(n, env, mesh, spmd, cache, chunk)
 
     def constrain(rel: TensorRelation, placement: Placement) -> TensorRelation:
         if not spmd or mesh is None or placement is None:
@@ -160,6 +175,11 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
 
     if isinstance(node, IAInput):
         out = constrain(env[node.name], node.placement)
+    elif isinstance(node, IAConst):
+        out = constrain(_const_rel(node.rtype, node.fill), node.placement)
+    elif isinstance(node, LocalPad):
+        out = tra.pad(rec(node.child), node.key_shape)
+        out = constrain(out, infer(node).placement)
     elif isinstance(node, Bcast):
         out = constrain(rec(node.child), Placement.replicated())
     elif isinstance(node, Shuf):
@@ -178,7 +198,7 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
         out = tra.fused_join_agg(rec(node.left), rec(node.right),
                                  node.join_keys_l, node.join_keys_r,
                                  node.join_kernel, node.group_by,
-                                 node.agg_kernel)
+                                 node.agg_kernel, chunk=chunk)
         ti = infer(node)
         out = constrain(out, ti.placement)
     elif isinstance(node, LocalFilter):
@@ -211,7 +231,8 @@ def evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
 
 
 def _jit_ia_plan(root: IANode, mesh: Mesh,
-                 input_order: Optional[list] = None) -> Callable:
+                 input_order: Optional[list] = None
+                 ) -> Tuple[Callable, list]:
     """Build a jitted function ``(*arrays) -> array`` executing ``root``.
 
     Input arrays arrive in ``input_order`` (names); shardings follow the
@@ -238,7 +259,53 @@ def _jit_ia_plan(root: IANode, mesh: Mesh,
 
 
 def jit_ia_plan(root: IANode, mesh: Mesh,
-                input_order: Optional[list] = None) -> Callable:
+                input_order: Optional[list] = None
+                ) -> Tuple[Callable, list]:
     """Deprecated shim — use ``Engine(mesh, executor="gspmd").compile``."""
     _warn_deprecated("jit_ia_plan", 'Engine(mesh, executor="gspmd").compile')
     return _jit_ia_plan(root, mesh, input_order)
+
+
+def _merge_ia_inputs(roots) -> Dict[str, IAInput]:
+    """name → IAInput over several physical roots; conflicting declarations
+    (type or placement) for one name are rejected."""
+    by_name: Dict[str, IAInput] = {}
+    for root in roots:
+        for n in postorder(as_node(root)):
+            if isinstance(n, IAInput):
+                prev = by_name.get(n.name)
+                if prev is not None and (prev.rtype != n.rtype
+                                         or prev.placement != n.placement):
+                    raise ValueError(
+                        f"input {n.name!r} declared with conflicting "
+                        f"type/placement across roots: "
+                        f"{prev.placement.describe()} vs "
+                        f"{n.placement.describe()}")
+                by_name[n.name] = n
+    return by_name
+
+
+def _jit_ia_plans(roots, mesh: Mesh,
+                  chunk: Optional[int] = None) -> Tuple[Callable, list]:
+    """Multi-root variant of :func:`_jit_ia_plan`: one jitted function
+    ``(*arrays) -> tuple(arrays)`` executing every physical root under the
+    shared SPMD input environment (required by ``Engine.value_and_grad``
+    tuples on the GSPMD executor)."""
+    roots = tuple(as_node(r) for r in roots)
+    by_name = _merge_ia_inputs(roots)
+    names = sorted(by_name)
+
+    def fn(*arrays):
+        env = {}
+        for name, arr in zip(names, arrays):
+            env[name] = TensorRelation(arr, by_name[name].rtype)
+        cache: dict = {}
+        return tuple(
+            _evaluate_ia(r, env, mesh=mesh, spmd=True, _cache=cache,
+                         chunk=chunk).data
+            for r in roots)
+
+    in_shardings = tuple(
+        NamedSharding(mesh, _pspec_for(by_name[n].placement, by_name[n].rtype))
+        for n in names)
+    return jax.jit(fn, in_shardings=in_shardings), names

@@ -16,7 +16,18 @@ Each kernel carries the metadata the optimizer needs:
   * ``flops``       — exact flop count for the compute roofline term,
   * ``is_associative``/``identity``/``reduce`` — for aggregation kernels,
   * ``distributes_over`` — names of agg kernels it distributes over (R1-4 /
-    R1-7 side conditions).
+    R1-7 side conditions),
+  * ``vjp``         — the kernel-level derivative rule consumed by
+    :mod:`repro.core.autodiff` (Tang et al., arXiv 2306.00088: backward
+    passes are *derived* from the forward relational plan).  For a binary
+    (join) kernel the rule is a pair of :class:`JoinVjp` specs — one per
+    operand — each naming the *registered kernel* that computes that
+    operand's cotangent from (cotangent, other operand); the autodiff
+    transform then emits the cotangent as a TRA join+aggregation, so the
+    backward graph is itself a ``TraNode`` DAG the optimizer can fuse.
+    For a unary (transform) kernel the rule is a builder
+    ``vjp(child_expr, out_expr, cot_expr) -> Expr`` written against the
+    lazy frontend (again: plain TRA ops, never opaque jax autodiff).
 """
 from __future__ import annotations
 
@@ -28,6 +39,21 @@ import jax
 import jax.numpy as jnp
 
 Bound = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinVjp:
+    """Derivative rule for ONE operand of a binary (join) kernel.
+
+    ``kernel`` names the registered kernel computing the operand's
+    cotangent; ``cot_first`` says whether the incoming cotangent is that
+    kernel's first operand (the other forward operand is the remaining
+    one).  E.g. for ``matMul``: dL = g @ Rᵀ = ``matTranMulR(g, R)`` →
+    ``JoinVjp("matTranMulR", cot_first=True)``.
+    """
+
+    kernel: str
+    cot_first: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +69,14 @@ class Kernel:
     identity: Optional[float] = None            # identity element for agg
     reduce: Optional[Callable[[jax.Array, Tuple[int, ...]], jax.Array]] = None
     distributes_over: Tuple[str, ...] = ()      # agg kernels f with k(f(a,b)) = f(k(a),k(b))
+    # derivative rule (see module docstring): for arity 2 a pair of
+    # Optional[JoinVjp] (None = that operand is non-differentiable); for
+    # arity 1 a builder (child_expr, out_expr, cot_expr) -> Expr.
+    vjp: Optional[Any] = None
+
+    @property
+    def differentiable(self) -> bool:
+        return self.vjp is not None
 
     def __call__(self, *arrays: jax.Array) -> jax.Array:
         return self.apply(*arrays)
@@ -85,6 +119,38 @@ def _same_bound(*bounds: Bound) -> Bound:
 
 
 # --------------------------------------------------------------------------
+# Structural gradient kernels (operand projections).  ``gradL``/``gradLNeg``
+# pass through (resp. negate) their first operand and ignore the second —
+# the VJP images of the linear elementwise kernels.  They exist so that the
+# backward graph stays inside the algebra: the shape/keys of the ignored
+# operand still drive the join's key alignment.
+# --------------------------------------------------------------------------
+
+gradL = register(Kernel(
+    name="gradL", arity=2,
+    apply=lambda a, b: a,
+    out_bound=lambda bl, br: tuple(bl),
+    flops=lambda *bs: 0,
+))
+
+gradLNeg = register(Kernel(
+    name="gradLNeg", arity=2,
+    apply=lambda a, b: -a,
+    out_bound=lambda bl, br: tuple(bl),
+    flops=lambda *bs: _prod(bs[0]),
+))
+
+# broadcast-back of an aggregated cotangent: second operand wins (the first
+# is a shape donor keyed by the pre-aggregation key space)
+gradR = register(Kernel(
+    name="gradR", arity=2,
+    apply=lambda a, b: b,
+    out_bound=lambda bl, br: tuple(br),
+    flops=lambda *bs: 0,
+))
+
+
+# --------------------------------------------------------------------------
 # Elementwise binary kernels
 # --------------------------------------------------------------------------
 
@@ -95,6 +161,7 @@ matAdd = register(Kernel(
     flops=lambda *bs: _prod(bs[0]),
     is_associative=True, identity=0.0,
     reduce=lambda x, axes: jnp.sum(x, axis=axes),
+    vjp=(JoinVjp("gradL"), JoinVjp("gradL")),
 ))
 
 matSub = register(Kernel(
@@ -102,6 +169,7 @@ matSub = register(Kernel(
     apply=lambda a, b: a - b,
     out_bound=_same_bound,
     flops=lambda *bs: _prod(bs[0]),
+    vjp=(JoinVjp("gradL"), JoinVjp("gradLNeg")),
 ))
 
 elemMul = register(Kernel(
@@ -111,6 +179,7 @@ elemMul = register(Kernel(
     flops=lambda *bs: _prod(bs[0]),
     is_associative=True, identity=1.0,
     reduce=lambda x, axes: jnp.prod(x, axis=axes),
+    vjp=(JoinVjp("elemMul"), JoinVjp("elemMul", cot_first=False)),
 ))
 
 elemMax = register(Kernel(
@@ -147,6 +216,9 @@ matMul = register(Kernel(
     apply=lambda a, b: jnp.matmul(a, b),
     out_bound=_mm_bound,
     flops=lambda bl, br: 2 * bl[0] * bl[1] * br[1],
+    # dA = G @ Bᵀ, dB = Aᵀ @ G — the closure of the matmul family under
+    # differentiation is exactly the paper's §5.3 kernel triple.
+    vjp=(JoinVjp("matTranMulR"), JoinVjp("matTranMulL", cot_first=False)),
 ))
 
 # A^T @ B  (the backprop weight-gradient kernel of paper §5.3)
@@ -155,6 +227,9 @@ matTranMulL = register(Kernel(
     apply=lambda a, b: jnp.einsum("...ij,...ik->...jk", a, b),
     out_bound=lambda bl, br: (bl[1], br[1]),
     flops=lambda bl, br: 2 * bl[0] * bl[1] * br[1],
+    # out = AᵀB: dA = B @ Gᵀ, dB = A @ G
+    vjp=(JoinVjp("matTranMulR", cot_first=False),
+         JoinVjp("matMul", cot_first=False)),
 ))
 
 # A @ B^T  (the backprop activation-gradient kernel of paper §5.3)
@@ -163,6 +238,17 @@ matTranMulR = register(Kernel(
     apply=lambda a, b: jnp.einsum("...ij,...kj->...ik", a, b),
     out_bound=lambda bl, br: (bl[0], br[0]),
     flops=lambda bl, br: 2 * bl[0] * bl[1] * br[0],
+    # out = ABᵀ: dA = G @ B, dB = Gᵀ @ A
+    vjp=(JoinVjp("matMul"), JoinVjp("matTranMulL")),
+))
+
+# dQ of matVecSub: the cotangent summed over the broadcast (row) dim,
+# keeping the query's (1, d) bound.  Ignores its second operand.
+_sumRowsKeep = register(Kernel(
+    name="sumRowsKeep", arity=2,
+    apply=lambda g, x: jnp.sum(g, axis=-2, keepdims=True),
+    out_bound=lambda bg, bx: (1,) + tuple(bg[-1:]),
+    flops=lambda bg, bx: _prod(bg),
 ))
 
 # x (row vector batch) - X : matrix-vector subtraction from paper §5.2
@@ -171,6 +257,7 @@ matVecSub = register(Kernel(
     apply=lambda q, x: q - x,
     out_bound=lambda bq, bx: bx,
     flops=lambda bq, bx: _prod(bx),
+    vjp=(JoinVjp("sumRowsKeep"), JoinVjp("gradLNeg")),
 ))
 
 
@@ -184,6 +271,7 @@ idOp = register(Kernel(
     out_bound=lambda b: tuple(b),
     flops=lambda b: 0,
     distributes_over=("matAdd", "elemMul", "elemMax", "elemMin"),
+    vjp=lambda x, y, g: g,
 ))
 
 relu = register(Kernel(
@@ -191,6 +279,9 @@ relu = register(Kernel(
     apply=lambda a: jnp.maximum(a, 0.0),
     out_bound=lambda b: tuple(b),
     flops=lambda b: _prod(b),
+    # relu'(z)·g — reluGrad on the *pre-activation* child (== reluGrad on
+    # the output away from 0, which is how §5.3 writes it by hand)
+    vjp=lambda x, y, g: x.map("reluGrad") * g,
 ))
 
 reluGrad = register(Kernel(
@@ -205,11 +296,39 @@ sigmoid = register(Kernel(
     apply=lambda a: jax.nn.sigmoid(a),
     out_bound=lambda b: tuple(b),
     flops=lambda b: 4 * _prod(b),
+    # σ'(z) = σ(z)(1-σ(z)) — recomputed from the forward *output*, which
+    # the autodiff transform passes in as the shared DAG node
+    vjp=lambda x, y, g: y.map("sigmoidGrad") * g,
+))
+
+sigmoidGrad = register(Kernel(
+    name="sigmoidGrad", arity=1,
+    apply=lambda s: s * (1.0 - s),
+    out_bound=lambda b: tuple(b),
+    flops=lambda b: 2 * _prod(b),
 ))
 
 def _diag(a: jax.Array) -> jax.Array:
     # diagonal of the last two dims, batched over leading dims
     return jnp.diagonal(a, axis1=-2, axis2=-1)
+
+def make_diag_embed(rows: int, cols: int) -> Kernel:
+    """Scatter a diagonal vector back into a (rows, cols) zero matrix —
+    the VJP image of ``diag``."""
+    idx = min(rows, cols)
+
+    def _apply(a: jax.Array) -> jax.Array:
+        out = jnp.zeros(a.shape[:-1] + (rows, cols), a.dtype)
+        rng = jnp.arange(idx)
+        return out.at[..., rng, rng].set(a[..., :idx])
+
+    return Kernel(
+        name=f"diagEmbed({rows},{cols})", arity=1,
+        apply=_apply,
+        out_bound=lambda b: (rows, cols),
+        flops=lambda b: 0,
+    )
+
 
 diag = register(Kernel(
     name="diag", arity=1,
@@ -218,7 +337,21 @@ diag = register(Kernel(
     flops=lambda b: 0,
     # diag(A + B) == diag(A) + diag(B): exactly the paper's R1-7 example.
     distributes_over=("matAdd",),
+    vjp=lambda x, y, g: g.map(make_diag_embed(*x.bound[-2:])),
 ))
+
+
+def make_row_broadcast(n: int) -> Kernel:
+    """Repeat along a trailing dim of size ``n`` — the VJP image of
+    ``rowSum``."""
+    return Kernel(
+        name=f"rowBroadcast({n})", arity=1,
+        apply=lambda a: jnp.broadcast_to(a[..., None], a.shape + (n,)),
+        out_bound=lambda b: tuple(b) + (n,),
+        flops=lambda b: 0,
+        distributes_over=("matAdd",),
+    )
+
 
 rowSum = register(Kernel(
     name="rowSum", arity=1,
@@ -226,6 +359,7 @@ rowSum = register(Kernel(
     out_bound=lambda b: tuple(b[:-1]),
     flops=lambda b: _prod(b),
     distributes_over=("matAdd",),
+    vjp=lambda x, y, g: g.map(make_row_broadcast(x.bound[-1])),
 ))
 
 
@@ -237,6 +371,7 @@ def make_scale_mul(eta: float) -> Kernel:
         out_bound=lambda b: tuple(b),
         flops=lambda b: _prod(b),
         distributes_over=("matAdd",),
+        vjp=lambda x, y, g: g.map(make_scale_mul(eta)),
     )
 
 
@@ -247,6 +382,7 @@ def make_transpose() -> Kernel:
         out_bound=lambda b: (b[-1], b[-2]),
         flops=lambda b: 0,
         distributes_over=(),
+        vjp=lambda x, y, g: g.map("transpose"),
     )
 
 

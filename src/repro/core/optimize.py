@@ -34,10 +34,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import kernels_registry as kr
 from repro.core.cost import cost_plan
-from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
-                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
-                             LocalTile, Placement, Shuf, TraAgg, TraConcat,
-                             TraFilter, TraInput, TraJoin, TraNode, TraReKey,
+from repro.core.plan import (Bcast, FusedJoinAgg, IAConst, IAInput, IANode,
+                             LocalAgg, LocalConcat, LocalFilter, LocalJoin,
+                             LocalMap, LocalPad, LocalTile, Placement, Shuf,
+                             TraAgg, TraConcat, TraConst, TraFilter,
+                             TraInput, TraJoin, TraNode, TraPad, TraReKey,
                              TraTile, TraTransform, TypeInfo, check_valid,
                              children, infer)
 from repro.core.tra import can_fuse
@@ -74,6 +75,10 @@ def logical_variants(node: TraNode, limit: int = 24) -> List[TraNode]:
 def _tree_sig(node: TraNode) -> Tuple:
     if isinstance(node, TraInput):
         return ("in", node.name)
+    if isinstance(node, TraConst):
+        return ("const", node.rtype.key_shape, node.rtype.bound, node.fill)
+    if isinstance(node, TraPad):
+        return ("pad", node.key_shape, _tree_sig(node.child))
     if isinstance(node, TraJoin):
         return ("join", node.join_keys_l, node.join_keys_r, node.kernel.name,
                 _tree_sig(node.left), _tree_sig(node.right))
@@ -108,6 +113,8 @@ def _rebuild(node: TraNode, new_children: Sequence[TraNode]) -> TraNode:
         return TraTile(new_children[0], node.tile_dim, node.tile_size)
     if isinstance(node, TraConcat):
         return TraConcat(new_children[0], node.key_dim, node.array_dim)
+    if isinstance(node, TraPad):
+        return TraPad(new_children[0], node.key_shape)
     return node
 
 
@@ -157,7 +164,7 @@ def _rewrite_once(node: TraNode) -> List[TraNode]:
             out.append(_rebuild(node, (lv, node.right)))
         for rv in _rewrite_once(node.right):
             out.append(_rebuild(node, (node.left, rv)))
-    elif not isinstance(node, TraInput):
+    elif not isinstance(node, (TraInput, TraConst)):
         for cv in _rewrite_once(node.child):
             out.append(_rebuild(node, (cv,)))
     return out
@@ -245,7 +252,7 @@ class Optimizer:
                 # every local op must satisfy its placement preconditions
                 # NOW — a later SHUF cannot repair locally-wrong results
                 if isinstance(n, (LocalJoin, LocalAgg, LocalConcat,
-                                  FusedJoinAgg)) \
+                                  FusedJoinAgg, LocalPad)) \
                         and ti.placement is None:
                     return None
                 # partitioned frontier dims must divide their axis sizes
@@ -296,6 +303,23 @@ class Optimizer:
         if isinstance(node, TraInput):
             p = input_placements.get(node.name, Placement.replicated())
             self._add(table, self._entry(IAInput(node.name, node.rtype, p)))
+
+        elif isinstance(node, TraConst):
+            # a constant materializes locally at ANY placement for free —
+            # seed the table with every interesting placement directly
+            for p in interesting_placements(node.rtype.key_arity,
+                                            self.site_axes):
+                self._add(table, self._entry(
+                    IAConst(node.rtype, node.fill, p)))
+
+        elif isinstance(node, TraPad):
+            ct = self.tables(node.child, input_placements, memo)
+            for ce in ct.values():
+                self._add(table, self._entry(
+                    LocalPad(ce.plan, tuple(node.key_shape))))
+                # frontier growth needs a replicated child
+                self._add(table, self._entry(
+                    LocalPad(Bcast(ce.plan), tuple(node.key_shape))))
 
         elif isinstance(node, TraJoin):
             lt = self.tables(node.left, input_placements, memo)
@@ -455,8 +479,10 @@ def optimize(root: TraNode,
 # ==========================================================================
 
 def _rebuild_ia(node: IANode, kids: Sequence[IANode]) -> IANode:
-    if isinstance(node, IAInput):
+    if isinstance(node, (IAInput, IAConst)):
         return node
+    if isinstance(node, LocalPad):
+        return LocalPad(kids[0], node.key_shape)
     if isinstance(node, LocalJoin):
         return LocalJoin(kids[0], kids[1], node.join_keys_l,
                          node.join_keys_r, node.kernel)
@@ -497,7 +523,7 @@ def _valid_same_placement(cand: IANode, original: IANode) -> bool:
         info = infer(cand, cache=cache)
         for n in _post(cand):
             if isinstance(n, (LocalJoin, LocalAgg, LocalConcat,
-                              FusedJoinAgg)) \
+                              FusedJoinAgg, LocalPad)) \
                     and cache[id(n)].placement is None:
                 return False
         orig = infer(original)

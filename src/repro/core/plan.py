@@ -105,6 +105,23 @@ class TraInput(TraNode):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class TraConst(TraNode):
+    """A literal constant relation: every key of the full grid maps to an
+    array filled with ``fill``.
+
+    Introduced for the autodiff layer (Tang et al. direction): the seed
+    cotangent of ``Σ`` over all output entries is a ones-relation, and the
+    broadcast-back rule of an aggregation needs a zero-cost *shape donor*
+    keyed by the pre-aggregation key space.  Constants are materialized
+    locally by every executor, so they carry no communication cost and may
+    be placed anywhere by the optimizer.
+    """
+
+    rtype: RelType
+    fill: float
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class TraJoin(TraNode):
     left: TraNode
     right: TraNode
@@ -154,6 +171,22 @@ class TraConcat(TraNode):
     array_dim: int
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class TraPad(TraNode):
+    """Densify: extend a relation with zero tuples to the full grid of
+    ``key_shape`` (holes zero-filled, frontier grown, mask dropped).
+
+    The dual of ``σ`` — not in the paper's §2 algebra, but required by its
+    differentiation (Tang et al.): the cotangent of a filtered relation is
+    *zero* (not absent) at the filtered-out keys, and cotangent fan-in
+    accumulation must add relations over one common key grid.  ``Pad`` is
+    the op that converts "absent" into "present with value 0".
+    """
+
+    child: TraNode
+    key_shape: Tuple[int, ...]
+
+
 # ==========================================================================
 # Physical (IA) nodes
 # ==========================================================================
@@ -166,6 +199,16 @@ class IANode:
 class IAInput(IANode):
     name: str
     rtype: RelType
+    placement: Placement
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IAConst(IANode):
+    """Physical constant — materialized locally at any placement for free
+    (a constant's shards are computable everywhere)."""
+
+    rtype: RelType
+    fill: float
     placement: Placement
 
 
@@ -252,6 +295,17 @@ class LocalConcat(IANode):
     array_dim: int
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class LocalPad(IANode):
+    """Physical Pad.  Zero-filling holes is always local; *growing* the
+    frontier of a partitioned dim would shift the per-site key windows, so
+    frontier growth requires a replicated child (the checker enforces it
+    via placement inference)."""
+
+    child: IANode
+    key_shape: Tuple[int, ...]
+
+
 def as_node(obj):
     """Unwrap an :class:`repro.core.expr.Expr`-like handle to its plan node.
 
@@ -272,7 +326,7 @@ def as_node(obj):
 def children(node) -> Tuple:
     if isinstance(node, (TraJoin, LocalJoin, FusedJoinAgg)):
         return (node.left, node.right)
-    if isinstance(node, (TraInput, IAInput)):
+    if isinstance(node, (TraInput, IAInput, TraConst, IAConst)):
         return ()
     return (node.child,)
 
@@ -302,6 +356,13 @@ def describe(node, indent: int = 0) -> str:
         extra = f"[{node.name}: f={node.rtype.key_shape} b={node.rtype.bound}]"
         if isinstance(node, IAInput):
             extra += f" @{node.placement.describe()}"
+    elif isinstance(node, (TraConst, IAConst)):
+        extra = (f"[{node.fill}: f={node.rtype.key_shape} "
+                 f"b={node.rtype.bound}]")
+        if isinstance(node, IAConst):
+            extra += f" @{node.placement.describe()}"
+    elif isinstance(node, (TraPad, LocalPad)):
+        extra = f"(key_shape={list(node.key_shape)})"
     elif isinstance(node, (TraJoin, LocalJoin)):
         extra = f"(L{list(node.join_keys_l)}=R{list(node.join_keys_r)}, " \
                 f"{node.kernel.name})"
@@ -428,6 +489,24 @@ def infer(node, env: Optional[Dict[str, TypeInfo]] = None,
     if isinstance(node, (TraInput, IAInput)):
         placement = node.placement if isinstance(node, IAInput) else None
         t = TypeInfo(node.rtype, None, placement)
+    elif isinstance(node, (TraConst, IAConst)):
+        placement = node.placement if isinstance(node, IAConst) else None
+        t = TypeInfo(node.rtype, None, placement)
+    elif isinstance(node, (TraPad, LocalPad)):
+        ct = rec(node.child)
+        ks = tuple(node.key_shape)
+        if len(ks) != ct.rtype.key_arity or \
+                any(k < f for k, f in zip(ks, ct.rtype.key_shape)):
+            raise ValueError(
+                f"pad key_shape {ks} must cover child frontier "
+                f"{ct.rtype.key_shape}")
+        t = TypeInfo(RelType(ks, ct.rtype.bound, ct.rtype.dtype), None, None)
+        if isinstance(node, LocalPad):
+            p = ct.placement
+            if p is not None and (p.is_replicated
+                                  or ks == ct.rtype.key_shape):
+                # mask zero-fill is local; frontier growth needs ALL(R)
+                t.placement = p
     elif isinstance(node, (TraJoin, LocalJoin)):
         lt, rt = rec(node.left), rec(node.right)
         t = _join_types(lt, rt, node.join_keys_l, node.join_keys_r,
@@ -702,7 +781,8 @@ def check_valid(root: IANode) -> TypeInfo:
     info = infer(root, cache=cache)
     for n in postorder(root):
         ti = cache[id(n)]
-        if isinstance(n, (LocalJoin, LocalAgg, LocalConcat, FusedJoinAgg)) \
+        if isinstance(n, (LocalJoin, LocalAgg, LocalConcat, FusedJoinAgg,
+                          LocalPad)) \
                 and ti.placement is None:
             raise ValueError(
                 f"invalid physical plan at {type(n).__name__}: "

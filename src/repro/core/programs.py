@@ -179,26 +179,60 @@ class FFNNProgram:
     w1_new: Expr
     w2_new: Expr
     a2: Expr
+    g_w1: Optional[Expr] = None          # raw weight gradients
+    g_w2: Optional[Expr] = None
+
+
+def _ffnn_forward(nb, db, hb, lb, bn, bd, bh, bl):
+    rx = E.input("X", (nb, db), (bn, bd))
+    ry = E.input("Y", (nb, lb), (bn, bl))
+    rw1 = E.input("W1", (db, hb), (bd, bh))
+    rw2 = E.input("W2", (hb, lb), (bh, bl))
+    a1 = (rx @ rw1).map("relu")
+    z2 = a1 @ rw2
+    a2 = z2.map("sigmoid")
+    return rx, ry, rw1, rw2, a1, z2, a2
 
 
 def ffnn_step_tra(nb: int, db: int, hb: int, lb: int,
                   bn: int, bd: int, bh: int, bl: int,
                   eta: float = 0.01) -> FFNNProgram:
-    """Paper §5.3 verbatim (with relu/sigmoid activations).
+    """Paper §5.3, with the backward pass **derived by autodiff** from the
+    forward plan (Tang et al., arXiv 2306.00088) instead of hand-written.
+
+    The forward pass is the paper's: ``a2 = σ(relu(X@W1)@W2)``.  The
+    paper's hand backward uses the classic sigmoid-cross-entropy shortcut
+    ``∂L/∂z2 = a2 − Y``; we reproduce it exactly by differentiating the
+    *pre-activation* ``z2`` with the seed cotangent ``a2 − Y`` — the
+    gradient expressions for W1 and W2 are then emitted by
+    :func:`repro.core.autodiff.grad`, not written out.  The hand-built
+    version survives as :func:`ffnn_step_tra_hand`, the correctness
+    oracle the autodiff output is tested against.
+    """
+    rx, ry, rw1, rw2, a1, z2, a2 = _ffnn_forward(
+        nb, db, hb, lb, bn, bd, bh, bl)
+    d_a2 = a2 - ry                       # ∂(Σ BCE(σ(z2), Y))/∂z2
+    g_w1, g_w2 = z2.grad(["W1", "W2"], seed=d_a2)
+
+    scale = make_scale_mul(eta)
+    w2_new = rw2 - g_w2.map(scale)
+    w1_new = rw1 - g_w1.map(scale)
+    return FFNNProgram(w1_new, w2_new, a2, g_w1, g_w2)
+
+
+def ffnn_step_tra_hand(nb: int, db: int, hb: int, lb: int,
+                       bn: int, bd: int, bh: int, bl: int,
+                       eta: float = 0.01) -> FFNNProgram:
+    """Paper §5.3 verbatim (with relu/sigmoid activations) — the
+    hand-written backward pass, kept as the autodiff correctness oracle.
 
     Key grids: X (nb, db), Y (nb, lb), W1 (db, hb), W2 (hb, lb); block
     bounds (bn, bd) etc.  The three roots share ``a1``/``a2``/``d_a2`` as
     DAG nodes, so one engine run over ``(w1_new, w2_new, a2)`` evaluates
     the forward pass once.
     """
-    rx = E.input("X", (nb, db), (bn, bd))
-    ry = E.input("Y", (nb, lb), (bn, bl))
-    rw1 = E.input("W1", (db, hb), (bd, bh))
-    rw2 = E.input("W2", (hb, lb), (bh, bl))
-
-    # forward
-    a1 = (rx @ rw1).map("relu")
-    a2 = (a1 @ rw2).map("sigmoid")
+    rx, ry, rw1, rw2, a1, z2, a2 = _ffnn_forward(
+        nb, db, hb, lb, bn, bd, bh, bl)
 
     # backward.  NOTE an erratum in the paper's §5.3 expressions: the
     # weight-gradient aggregations are written Σ_(⟨0,2⟩,·) like the matmul
@@ -219,7 +253,7 @@ def ffnn_step_tra(nb: int, db: int, hb: int, lb: int,
     scale = make_scale_mul(eta)
     w2_new = rw2 - g_w2.map(scale)
     w1_new = rw1 - g_w1.map(scale)
-    return FFNNProgram(w1_new, w2_new, a2)
+    return FFNNProgram(w1_new, w2_new, a2, g_w1, g_w2)
 
 
 def ffnn_dp_placements(nb, db, hb, lb) -> Dict[str, Placement]:

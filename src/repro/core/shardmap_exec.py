@@ -24,11 +24,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import tra
-from repro.core.interp import _pspec_for, _warn_deprecated
-from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
-                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
-                             LocalTile, Placement, Shuf, TypeInfo, as_node,
-                             infer, postorder)
+from repro.core.interp import _merge_ia_inputs, _pspec_for, _warn_deprecated
+from repro.core.plan import (Bcast, FusedJoinAgg, IAConst, IAInput, IANode,
+                             LocalAgg, LocalConcat, LocalFilter, LocalJoin,
+                             LocalMap, LocalPad, LocalTile, Placement, Shuf,
+                             TypeInfo, as_node, infer, postorder)
 from repro.core.tra import RelType, TensorRelation
 
 if hasattr(jax, "shard_map"):
@@ -144,20 +144,28 @@ def _move(x: jax.Array, src: Placement, tgt: Placement,
     return x
 
 
-def _execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
-                      mesh: Mesh) -> TensorRelation:
-    """Execute a physical plan with explicit collectives; returns the global
-    relation (gathered back according to the plan's final placement)."""
-    root = as_node(root)
+def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None):
+    """Build the explicit-collective callable ONCE for a tuple of physical
+    roots.
+
+    Returns ``(call, names, out_infos)``: ``call(env) -> tuple`` of global
+    :class:`TensorRelation` results.  Building at *compile* time (instead
+    of per ``run``) lets :class:`~repro.core.engine.Engine`'s structural
+    compile cache reuse the constructed ``shard_map`` across run calls —
+    repeat executions of one plan signature are pure dispatch.  Multiple
+    roots execute inside one ``shard_map`` under a shared input
+    environment (the multi-output path ``Engine.value_and_grad`` needs).
+    """
+    roots = tuple(as_node(r) for r in roots)
     cache: Dict[int, TypeInfo] = {}
-    out_info = infer(root, cache=cache)
-    inputs = [n for n in postorder(root) if isinstance(n, IAInput)]
-    names = sorted({n.name for n in inputs})
-    by_name = {n.name: n for n in inputs}
-    for n in postorder(root):
-        if cache[id(n)].mask is not None:
-            raise NotImplementedError(
-                "shard_map mode requires continuous relations")
+    out_infos = tuple(infer(r, cache=cache) for r in roots)
+    by_name = _merge_ia_inputs(roots)
+    names = sorted(by_name)
+    for r in roots:
+        for n in postorder(r):
+            if cache[id(n)].mask is not None:
+                raise NotImplementedError(
+                    "shard_map mode requires continuous relations")
 
     def local_fn(*arrs):
         local_env = dict(zip(names, arrs))
@@ -169,6 +177,22 @@ def _execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
             info = cache[id(node)]
             if isinstance(node, IAInput):
                 out = local_env[node.name]
+            elif isinstance(node, IAConst):
+                lt = _local_rtype(info, mesh)
+                out = jnp.full(tuple(lt.key_shape) + tuple(lt.bound),
+                               node.fill, lt.dtype)
+            elif isinstance(node, LocalPad):
+                ct = cache[id(node.child)]
+                cx = rec(node.child)
+                if tuple(node.key_shape) == ct.rtype.key_shape:
+                    out = cx        # masks are rejected above → identity
+                else:
+                    # frontier growth: placement rules force a replicated
+                    # child, so the local block IS the global relation
+                    crel = TensorRelation(cx, RelType(
+                        cx.shape[:ct.rtype.key_arity], ct.rtype.bound,
+                        ct.rtype.dtype))
+                    out = tra.pad(crel, node.key_shape).data
             elif isinstance(node, (Bcast, Shuf)):
                 child = rec(node.child)
                 src = cache[id(node.child)].placement
@@ -209,7 +233,8 @@ def _execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
                     rt.rtype.dtype))
                 out = tra.fused_join_agg(
                     lrel, rrel, node.join_keys_l, node.join_keys_r,
-                    node.join_kernel, node.group_by, node.agg_kernel).data
+                    node.join_kernel, node.group_by, node.agg_kernel,
+                    chunk=chunk).data
             elif isinstance(node, LocalMap):
                 ct = cache[id(node.child)]
                 cx = rec(node.child)
@@ -262,24 +287,42 @@ def _execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
             memo[id(node)] = out
             return out
 
-        res = rec(root)
-        # resolve any trailing duplicate state so the output is clean
-        p = out_info.placement
-        if p is not None and p.dup_axes:
-            res, _ = _resolve_dups(res, p, None, mesh)
-        return res
+        outs = []
+        for root, oi in zip(roots, out_infos):
+            res = rec(root)
+            # resolve any trailing duplicate state so the output is clean
+            p = oi.placement
+            if p is not None and p.dup_axes:
+                res, _ = _resolve_dups(res, p, None, mesh)
+            outs.append(res)
+        return tuple(outs)
 
     in_specs = tuple(_pspec_for(by_name[n].placement, by_name[n].rtype)
                      for n in names)
-    out_p = out_info.placement
-    if out_p is not None and out_p.dup_axes:
-        out_p = Placement.partitioned(out_p.dims, out_p.axes)
-    out_spec = _pspec_for(out_p, out_info.rtype)
+    out_specs = []
+    for oi in out_infos:
+        out_p = oi.placement
+        if out_p is not None and out_p.dup_axes:
+            out_p = Placement.partitioned(out_p.dims, out_p.axes)
+        out_specs.append(_pspec_for(out_p, oi.rtype))
     fn = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                    out_specs=out_spec)
-    arrays = [env[n].data for n in names]
-    out = fn(*arrays)
-    return TensorRelation(out, out_info.rtype)
+                    out_specs=tuple(out_specs))
+
+    def call(env: Dict[str, TensorRelation]):
+        arrays = [env[n].data for n in names]
+        outs = fn(*arrays)
+        return tuple(TensorRelation(o, oi.rtype)
+                     for o, oi in zip(outs, out_infos))
+
+    return call, names, out_infos
+
+
+def _execute_shardmap(root: IANode, env: Dict[str, TensorRelation],
+                      mesh: Mesh) -> TensorRelation:
+    """One-shot single-root execution (builds the shard_map afresh — the
+    Engine path builds once at compile time instead)."""
+    call, _, _ = _build_shardmap((root,), mesh)
+    return call(env)[0]
 
 
 def execute_shardmap(root: IANode, env: Dict[str, TensorRelation],

@@ -539,10 +539,17 @@ def _fused_chunked(g: _JoinGeometry, left: TensorRelation,
     return jnp.transpose(res, perm)
 
 
+# Default streaming-chunk budget for the fused fallback path: each
+# fori_loop step materializes ``chunk`` grid slices, so the bytes-based
+# default keeps peak live payload near this budget regardless of shape.
+DEFAULT_CHUNK_BYTES = 16 * 1024 * 1024
+
+
 def fused_join_agg(left: TensorRelation, right: TensorRelation,
                    join_keys_l: Sequence[int], join_keys_r: Sequence[int],
                    join_kernel: Kernel, group_by: Sequence[int],
-                   agg_kernel: Kernel, *, chunk: int = 1) -> TensorRelation:
+                   agg_kernel: Kernel, *,
+                   chunk: Optional[int] = None) -> TensorRelation:
     """Σ_(groupBy, aggOp) ∘ ⋈_(jkl, jkr, projOp) without the grid.
 
     Semantically identical to ``agg(join(left, right, ...), group_by, ...)``
@@ -553,7 +560,10 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
     * one ``jnp.einsum``/dot_general for any contraction-shaped pair
       (matMul / matTranMulL / matTranMulR / elemMul with matAdd);
     * a chunked ``lax.fori_loop`` streaming reduction for every other
-      associative kernel pair.
+      associative kernel pair.  ``chunk`` is the number of grid slices
+      each loop step materializes; ``None`` derives it from
+      :data:`DEFAULT_CHUNK_BYTES` (configurable per
+      :class:`~repro.core.engine.Engine` via its ``chunk`` parameter).
 
     Falls back to the unfused pair when nothing is actually reduced or when
     holes cannot be identity-filled — the unfused path remains the
@@ -585,6 +595,11 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
     if has_mask and agg_kernel.identity is None:
         # cannot identity-fill holes — mirror tra.agg's requirement
         return agg(join(left, right, jkl, jkr, join_kernel), gb, agg_kernel)
+    if chunk is None:
+        itemsize = jnp.dtype(left.data.dtype).itemsize
+        slice_floats = (math.prod(out_key_shape) if out_key_shape else 1) \
+            * (math.prod(out_bound) if out_bound else 1)
+        chunk = max(1, DEFAULT_CHUNK_BYTES // max(1, slice_floats * itemsize))
     data = _fused_chunked(g, left, right, join_kernel, gb, reduce_dims,
                           agg_kernel, chunk)
     return TensorRelation(
@@ -638,6 +653,30 @@ def filt(rel: TensorRelation, bool_func: BoolFunc) -> TensorRelation:
         mask = None
     rt = RelType(f_out, rel.bound, rel.data.dtype)
     return TensorRelation(data, rt, mask)
+
+
+def pad(rel: TensorRelation, key_shape: Sequence[int]) -> TensorRelation:
+    """Pad_(keyShape)(R) — densify: zero-fill holes, grow the frontier.
+
+    The dual of σ, introduced for the autodiff layer: converts "tuple
+    absent" into "tuple present with value 0" so cotangents over filtered
+    key spaces can be accumulated on one common grid.
+    """
+    ks = tuple(key_shape)
+    if len(ks) != rel.rtype.key_arity or \
+            any(k < f for k, f in zip(ks, rel.key_shape)):
+        raise ValueError(
+            f"pad key_shape {ks} must cover frontier {rel.key_shape}")
+    data = rel.data
+    if rel.mask is not None:
+        m = jnp.asarray(
+            rel.mask.reshape(rel.mask.shape + (1,) * rel.rtype.rank))
+        data = jnp.where(m, data, jnp.zeros((), data.dtype))
+    if ks != rel.key_shape:
+        widths = [(0, k - f) for k, f in zip(ks, rel.key_shape)] \
+            + [(0, 0)] * rel.rtype.rank
+        data = jnp.pad(data, widths)
+    return TensorRelation(data, RelType(ks, rel.bound, data.dtype))
 
 
 def transform(rel: TensorRelation, kernel: Kernel) -> TensorRelation:

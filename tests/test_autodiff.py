@@ -1,0 +1,375 @@
+"""Autodiff over the Expr frontend: `Expr.grad` / `Engine.value_and_grad`.
+
+Covers the acceptance criteria of the differentiable-TRA redesign:
+
+* parametrized gradcheck sweep — every registered differentiable kernel
+  (join, transform, aggregation) and the structural ops (tile / concat /
+  rekey / filter / pad), each compared against ``jax.grad`` of the dense
+  reference-executor oracle, including *masked* relations;
+* autodiff-derived §5.3 FFNN backward ≡ the hand-built paper backward ≡ a
+  ``jax.grad`` dense oracle (atol 1e-5), at BMM/CPMM/RMM-flavoured block
+  shapes, and `Engine.value_and_grad` on the reference/jit executors plus
+  single-device gspmd/shard_map meshes (the 8-device case runs in
+  tests/_distributed_checks.py);
+* the optimizer selecting ``FusedJoinAgg`` inside an autodiff-generated
+  gradient plan;
+* error paths (non-differentiable kernels, unknown wrt, bad seed) and the
+  configurable fused-path ``chunk``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as tra
+from repro.core import (AutodiffError, Engine, Placement, RelType,
+                        TensorRelation, from_tensor, to_tensor)
+from repro.core.kernels_registry import make_scale_mul
+from repro.core.plan import TraInput, postorder
+from repro.core.programs import ffnn_step_tra, ffnn_step_tra_hand
+
+S = ("sites",)
+REF = Engine(executor="reference", optimize=False)
+ORACLE = Engine(executor="reference", optimize=False, fuse=False)
+
+
+def _rel(seed, ks, bound, mask=None):
+    data = jax.random.normal(jax.random.PRNGKey(seed),
+                             tuple(ks) + tuple(bound))
+    return TensorRelation(data, RelType(tuple(ks), tuple(bound)), mask)
+
+
+def gradcheck(expr, wrt, envs, atol=1e-4):
+    """`expr.grad(wrt)` on the reference executor vs `jax.grad` of the
+    dense unfused oracle (masked output entries excluded from the loss;
+    masked input entries excluded from the comparison)."""
+    dX = expr.grad(wrt)
+    need = {n.name for n in postorder(dX.node) if isinstance(n, TraInput)}
+    got = REF.run(dX, **{k: v for k, v in envs.items() if k in need})
+    fwd_need = {n.name for n in postorder(expr.node)
+                if isinstance(n, TraInput)}
+
+    def loss(arr):
+        e2 = {k: v for k, v in envs.items() if k in fwd_need}
+        e2[wrt] = TensorRelation(arr, envs[wrt].rtype, envs[wrt].mask)
+        out = ORACLE.run(expr, **e2)
+        data = out.data
+        if out.mask is not None:
+            data = data * jnp.asarray(out.mask.reshape(
+                out.mask.shape + (1,) * out.rtype.rank))
+        return jnp.sum(data)
+
+    want = jax.grad(loss)(envs[wrt].data)
+    gd, wd = np.asarray(got.data), np.asarray(want)
+    assert gd.shape == wd.shape, (gd.shape, wd.shape)
+    gm = envs[wrt].mask
+    if gm is not None:           # gradients at absent tuples are undefined
+        sel = gm.reshape(gm.shape + (1,) * (gd.ndim - gm.ndim))
+        gd, wd = gd * sel, wd * sel
+    np.testing.assert_allclose(gd, wd, atol=atol, rtol=1e-4)
+
+
+# ==========================================================================
+# Gradcheck sweep: join kernels
+# ==========================================================================
+
+M = tra.input("M", (2, 2), (4, 4))
+A34 = tra.input("A", (2, 2), (4, 3))
+
+JOIN_CASES = {
+    # name: (expr builder over fresh inputs, input types)
+    "matMul-bmm": (lambda a, b: a @ b,
+                   [((2, 3), (4, 5)), ((3, 2), (5, 4))]),
+    "matMul-join-only": (
+        lambda a, b: a.join(b, on=((1,), (0,)), kernel="matMul"),
+        [((2, 3), (4, 5)), ((3, 2), (5, 4))]),
+    "matTranMulL": (
+        lambda a, b: a.join(b, on=((0,), (0,)),
+                            kernel="matTranMulL").agg((1, 2), "matAdd"),
+        [((3, 2), (4, 3)), ((3, 2), (4, 5))]),
+    "matTranMulR": (
+        lambda a, b: a.join(b, on=((1,), (1,)),
+                            kernel="matTranMulR").agg((0, 2), "matAdd"),
+        [((2, 3), (4, 5)), ((2, 3), (6, 5))]),
+    "matAdd": (lambda a, b: (a + b).sum(0),
+               [((2, 3), (4, 5)), ((2, 3), (4, 5))]),
+    "matSub": (lambda a, b: (a - b).map("sigmoid"),
+               [((2, 3), (4, 5)), ((2, 3), (4, 5))]),
+    "elemMul": (lambda a, b: (a * b).agg((1,), "matAdd"),
+                [((2, 3), (4, 5)), ((2, 3), (4, 5))]),
+    "matVecSub": (
+        lambda q, x: q.join(x, on=((0,), (1,)),
+                            kernel="matVecSub").map("relu").sum(0),
+        [((2,), (1, 4)), ((3, 2), (5, 4))]),
+    "cross-frontier-min": (
+        lambda a, b: a.join(b, on=((0,), (0,)),
+                            kernel="elemMul").agg((0, 1), "matAdd"),
+        [((3, 2), (4, 4)), ((2, 2), (4, 4))]),
+}
+
+
+@pytest.mark.parametrize("case", sorted(JOIN_CASES))
+@pytest.mark.parametrize("side", [0, 1])
+def test_gradcheck_join_kernels(case, side):
+    build, types = JOIN_CASES[case]
+    names = ["L", "R"]
+    ins = [tra.input(nm, ks, b) for nm, (ks, b) in zip(names, types)]
+    envs = {nm: _rel(i + hash(case) % 97, *t)
+            for i, (nm, t) in enumerate(zip(names, types))}
+    gradcheck(build(*ins), names[side], envs)
+
+
+# ==========================================================================
+# Gradcheck sweep: transform kernels and structural ops
+# ==========================================================================
+
+UNARY_CASES = {
+    "idOp": lambda m: m.map("idOp").sum(0),
+    "relu": lambda m: m.map("relu").sum(0, 1),
+    "sigmoid": lambda m: m.map("sigmoid"),
+    "relu∘sigmoid": lambda m: m.map("sigmoid").map("relu").sum(1),
+    "transpose": lambda m: m.map("transpose").map("sigmoid"),
+    "scaleMul": lambda m: m.map(make_scale_mul(0.37)),
+    "rowSum": lambda m: m.map("rowSum").sum(0),
+    "diag": lambda m: m.map("diag").sum(1),
+    "tile": lambda m: m.tile(1, 2).map("relu").sum(0, 1),
+    "concat": lambda m: m.concat(0, 0).map("sigmoid"),
+    "rekey-swap": lambda m: m.rekey(lambda kk: (kk[1], kk[0]),
+                                    tag="swap").map("relu"),
+    "filter-hole": lambda m: m.filter(lambda kk: kk != (1, 1),
+                                      tag="hole").agg((0, 1), "matAdd"),
+    "filter-shrink": lambda m: m.filter(lambda kk: kk[1] < 2,
+                                        tag="shrink").sum(0, 1),
+    "pad": lambda m: m.filter(lambda kk: kk[0] == 0,
+                              tag="row0").pad((2, 3)).map("relu"),
+    "agg-bcast-back": lambda m: m.map("sigmoid").sum(1).map("relu"),
+    "permuted-gb": lambda m: (m * m.map("sigmoid")).agg((1, 0), "matAdd"),
+    "fan-in": lambda m: (m.map("relu")
+                         + m.map("relu").map("sigmoid")).sum(0, 1),
+    "deep-chain": lambda m: (m.rekey(lambda kk: (kk[1], kk[0]), tag="swap")
+                             .map("sigmoid").sum(1)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(UNARY_CASES))
+def test_gradcheck_unary_and_structural(case):
+    m = tra.input("M", (2, 3), (4, 4))
+    gradcheck(UNARY_CASES[case](m), "M", {"M": _rel(11, (2, 3), (4, 4))})
+
+
+@pytest.mark.parametrize("case", ["elemMul", "matAdd", "relu-masked",
+                                  "agg-masked"])
+def test_gradcheck_masked_relations(case):
+    """Inputs with holes: gradients at valid tuples must match the oracle
+    (masked entries carry no gradient by construction)."""
+    mask = np.ones((2, 3), bool)
+    mask[0, 1] = False
+    m = tra.input("M", (2, 3), (4, 4))
+    o = tra.input("O", (2, 3), (4, 4))
+    holey = _rel(21, (2, 3), (4, 4), mask)
+    full = _rel(22, (2, 3), (4, 4))
+    exprs = {
+        "elemMul": (m * o).sum(0),
+        "matAdd": (m + o).map("sigmoid"),
+        "relu-masked": m.map("relu").map("sigmoid"),
+        "agg-masked": m.agg((1,), "matAdd"),
+    }
+    gradcheck(exprs[case], "M", {"M": holey, "O": full})
+
+
+# ==========================================================================
+# Derivative-rule error paths
+# ==========================================================================
+
+def test_non_differentiable_join_kernel_raises():
+    a = tra.input("A", (2,), (4, 4))
+    b = tra.input("B", (2,), (4, 4))
+    e = a.join(b, on=((0,), (0,)), kernel="elemMax")
+    with pytest.raises(AutodiffError, match="elemMax"):
+        e.grad("A")
+
+
+def test_non_matadd_aggregation_raises():
+    m = tra.input("M", (2, 2), (4, 4))
+    with pytest.raises(AutodiffError, match="elemMax"):
+        m.agg((0,), "elemMax").grad("M")
+
+
+def test_unknown_wrt_and_bad_seed_raise():
+    m = tra.input("M", (2, 2), (4, 4))
+    e = m.map("relu")
+    with pytest.raises(AutodiffError, match="do not occur"):
+        e.grad("Q")
+    with pytest.raises(AutodiffError, match="seed type"):
+        e.grad("M", seed=tra.const(1.0, (2, 2), (3, 3)))
+
+
+def test_grad_of_gradl_shape_donor_input_flows_zero():
+    """An input consumed only through value-ignoring kernels still gets an
+    exact (zero) gradient — gradL's vjp is itself gradL/zero-ish, and the
+    masked-agg identity-fill zeroes the untouched contributions."""
+    m = tra.input("M", (2, 2), (4, 4))
+    o = tra.input("O", (2, 2), (4, 4))
+    e = m.join(o, on=((0, 1), (0, 1)), kernel="matAdd").sum(0)
+    dm, do = e.grad(["M", "O"])
+    RM, RO = _rel(61, (2, 2), (4, 4)), _rel(62, (2, 2), (4, 4))
+    np.testing.assert_allclose(np.asarray(REF.run(dm, O=RO).data), 1.0)
+    np.testing.assert_allclose(np.asarray(REF.run(do, M=RM).data), 1.0)
+
+
+# ==========================================================================
+# §5.3 FFNN: autodiff ≡ hand-built ≡ jax.grad, on all executors
+# ==========================================================================
+
+FFNN_SHAPES = {
+    # block grids flavoured after the §5.1 strategies: batch-heavy (BMM),
+    # contraction-heavy (CPMM), balanced (RMM)
+    "bmm-batch-heavy": (4, 2, 2, 2, 4, 4, 4, 2),
+    "cpmm-contraction-heavy": (2, 4, 4, 2, 4, 4, 4, 2),
+    "rmm-balanced": (2, 2, 2, 2, 4, 4, 4, 2),
+}
+
+
+def _ffnn_env(nb, db, hb, lb, bn, bd, bh, bl):
+    N, D, H, L = nb * bn, db * bd, hb * bh, lb * bl
+    X = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    Y = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(1), (N, L)))
+    W1 = jax.random.normal(jax.random.PRNGKey(2), (D, H)) * 0.3
+    W2 = jax.random.normal(jax.random.PRNGKey(3), (H, L)) * 0.3
+    env = dict(X=from_tensor(X, (bn, bd)), Y=from_tensor(Y, (bn, bl)),
+               W1=from_tensor(W1, (bd, bh)), W2=from_tensor(W2, (bh, bl)))
+    return (X, Y, W1, W2), env
+
+
+@pytest.mark.parametrize("shape", sorted(FFNN_SHAPES))
+def test_ffnn_autodiff_matches_hand_built(shape):
+    dims = FFNN_SHAPES[shape]
+    (X, Y, W1, W2), env = _ffnn_env(*dims)
+    auto = ffnn_step_tra(*dims, eta=0.01)
+    hand = ffnn_step_tra_hand(*dims, eta=0.01)
+    eng = Engine(executor="jit", optimize=False)
+    aw1, aw2 = eng.run((auto.w1_new, auto.w2_new), **env)
+    hw1, hw2 = eng.run((hand.w1_new, hand.w2_new), **env)
+    np.testing.assert_allclose(np.asarray(aw1.data), np.asarray(hw1.data),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(aw2.data), np.asarray(hw2.data),
+                               atol=1e-5, rtol=1e-5)
+    # and both match the dense jnp oracle for the same SGD step
+    a1 = jax.nn.relu(X @ W1)
+    d2 = jax.nn.sigmoid(a1 @ W2) - Y
+    gw2 = a1.T @ d2
+    gw1 = X.T @ ((a1 > 0) * (d2 @ W2.T))
+    np.testing.assert_allclose(np.asarray(to_tensor(aw1)),
+                               np.asarray(W1 - 0.01 * gw1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(to_tensor(aw2)),
+                               np.asarray(W2 - 0.01 * gw2), atol=1e-5)
+
+
+@pytest.mark.parametrize("executor", ["reference", "jit", "gspmd",
+                                      "shard_map"])
+def test_value_and_grad_ffnn_all_executors(executor):
+    """`Engine.value_and_grad` of the §5.3 forward vs a jax.grad dense
+    oracle (atol 1e-5).  gspmd/shard_map run on a 1-device mesh here; the
+    8-device versions run in tests/_distributed_checks.py."""
+    dims = (4, 2, 2, 2, 4, 4, 4, 2)
+    (X, _, W1, W2), env = _ffnn_env(*dims)
+    env.pop("Y")
+    prog = ffnn_step_tra(*dims)
+    kwargs = {}
+    if executor in ("gspmd", "shard_map"):
+        from repro.launch.mesh import make_mesh
+        kwargs["mesh"] = make_mesh((1,), S)
+        kwargs["input_placements"] = {
+            "X": Placement.partitioned((0,), S),
+            "W1": Placement.replicated(), "W2": Placement.replicated()}
+    eng = Engine(executor=executor, **kwargs)
+    vg = eng.value_and_grad(prog.a2, wrt=["W1", "W2"])
+    val, g1, g2 = vg.run(**env)
+    assert vg.grad_wrt == ("W1", "W2")
+
+    def loss(W1, W2):
+        return jnp.sum(jax.nn.sigmoid(jax.nn.relu(X @ W1) @ W2))
+
+    wg1, wg2 = jax.grad(loss, argnums=(0, 1))(W1, W2)
+    np.testing.assert_allclose(
+        np.asarray(to_tensor(val)),
+        np.asarray(jax.nn.sigmoid(jax.nn.relu(X @ W1) @ W2)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(to_tensor(g1)), np.asarray(wg1),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(to_tensor(g2)), np.asarray(wg2),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_optimizer_fuses_autodiff_gradient_plan():
+    """The fused Σ∘⋈ selection must fire inside an autodiff-generated
+    backward plan (the gradients are agg(join(·)) patterns by
+    construction)."""
+    prog = ffnn_step_tra(4, 2, 2, 2, 4, 4, 4, 2)
+    eng = Engine(executor="jit", axis_sizes={"sites": 2})
+    assert "FusedJoinAgg" in eng.compile(prog.g_w1).describe()
+    assert "FusedJoinAgg" in eng.compile(prog.g_w2).describe()
+
+
+def test_gradient_structure_matches_paper_hand_backward():
+    """The derived ∂/∂W2 is structurally the paper's hand expression:
+    Σ_(1,2)(⋈_(0,0)(a1, a2−Y, matTranMulL))."""
+    prog = ffnn_step_tra(2, 2, 2, 2, 4, 4, 4, 2)
+    d = prog.g_w2.describe()
+    head = d.splitlines()[:2]
+    assert "TraAgg(gb=[1, 2], matAdd)" in head[0]
+    assert "TraJoin(L[0]=R[0], matTranMulL)" in head[1]
+
+
+# ==========================================================================
+# Satellites: chunk configuration, multi-root distributed compile
+# ==========================================================================
+
+def test_engine_chunk_is_configurable_and_cached_separately():
+    a = tra.input("A", (2, 4), (4, 4))
+    b = tra.input("B", (4, 2), (4, 4))
+    # elemMax agg over a join → the chunked streaming fused path
+    e = a.join(b, on=((1,), (0,)), kernel="elemMul").agg((0, 2), "elemMax")
+    RA, RB = _rel(31, (2, 4), (4, 4)), _rel(32, (4, 2), (4, 4))
+    want = ORACLE.run(e, A=RA, B=RB)
+    eng = Engine(executor="jit", optimize=False)
+    for chunk in (None, 1, 2):
+        got = eng.compile(e, chunk=chunk).run(A=RA, B=RB)
+        np.testing.assert_allclose(np.asarray(got.data),
+                                   np.asarray(want.data),
+                                   atol=1e-5, rtol=1e-5)
+    assert eng.cache_misses == 3          # distinct artifacts per chunk
+    with pytest.raises(ValueError, match="chunk"):
+        Engine(chunk=0)
+
+
+def test_multi_root_on_gspmd_and_shardmap_single_device():
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), S)
+    a = tra.input("A", (2, 2), (4, 4))
+    b = tra.input("B", (2, 2), (4, 4))
+    r1, r2 = (a @ b), (a + b).sum(0)
+    RA, RB = _rel(41, (2, 2), (4, 4)), _rel(42, (2, 2), (4, 4))
+    want1 = REF.run(r1, A=RA, B=RB)
+    want2 = REF.run(r2, A=RA, B=RB)
+    for executor in ("gspmd", "shard_map"):
+        eng = Engine(mesh, executor=executor)
+        got1, got2 = eng.run((r1, r2), A=RA, B=RB)
+        np.testing.assert_allclose(np.asarray(got1.data),
+                                   np.asarray(want1.data), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(got2.data),
+                                   np.asarray(want2.data), atol=1e-5)
+
+
+def test_const_and_pad_run_on_every_executor():
+    from repro.launch.mesh import make_mesh
+    ones = tra.const(1.0, (2, 2), (4, 4))
+    m = tra.input("M", (2, 2), (4, 4))
+    e = (m * ones).pad((3, 3)).sum(0, 1)
+    RM = _rel(51, (2, 2), (4, 4))
+    want = REF.run(e, M=RM)
+    for eng in (Engine(executor="jit"),
+                Engine(make_mesh((1,), S), executor="gspmd"),
+                Engine(make_mesh((1,), S), executor="shard_map")):
+        got = eng.run(e, M=RM)
+        np.testing.assert_allclose(np.asarray(got.data),
+                                   np.asarray(want.data), atol=1e-6)
