@@ -18,13 +18,14 @@ def main(argv=None) -> int:
     ap.add_argument("--with-measured", action="store_true")
     args = ap.parse_args(argv)
 
-    from benchmarks import ffnn, fusion, matmul, nn_search, roofline
+    from benchmarks import ffnn, fusion, matmul, nn_search, roofline, train
 
     sections = [
         ("§5.1 matmul (Tables 3–4)", matmul.run),
         ("§5.2 nn-search (Tables 5–6)", nn_search.run),
         ("§5.3 ffnn (Tables 7–9)", ffnn.run),
         ("fused Σ∘⋈ contraction (BENCH_fusion.json)", fusion.run),
+        ("TRA train step (BENCH_train.json)", train.run),
         ("roofline (assignment g)", roofline.run),
     ]
     failures = 0

@@ -69,6 +69,28 @@ def main():
           " ".join(f"{l:.4f}" for l in losses))
     assert losses[-1] < losses[0]
 
+    # the same training, TRA-native end to end: loss + autodiff backward
+    # + AdamW update compiled as ONE named multi-root program that the
+    # engine caches — steps >= 2 are pure dispatch
+    from repro.core import AdamW, TraTrainer
+    from repro.core.programs import ffnn_train_step_tra
+
+    W1b = jax.random.normal(jax.random.PRNGKey(2), (D, H)) * (D ** -0.5)
+    W2b = jax.random.normal(jax.random.PRNGKey(3), (H, L)) * (H ** -0.5)
+    step_prog = ffnn_train_step_tra(
+        nb, db, hb, lb, bn, bd, bh, bl,
+        optimizer=AdamW(1e-2, weight_decay=0.01))
+    trainer = TraTrainer(Engine(executor="jit"), step_prog,
+                         params={"W1": from_tensor(W1b, (bd, bh)),
+                                 "W2": from_tensor(W2b, (bh, bl))})
+    losses = trainer.fit(12, X=from_tensor(X, (bn, bd)),
+                         Y=from_tensor(Y, (bn, bl)))
+    print("Σ-BCE per TRA-AdamW step:",
+          " ".join(f"{l:.1f}" for l in losses))
+    assert losses[-1] < losses[0]
+    assert trainer.engine.cache_hits == 11     # steps 2+ are pure dispatch
+    print("TRA-native AdamW train loop: compile once, dispatch forever ✓")
+
     # plan pricing: TRA-DP vs TRA-MP (per weight-update root)
     sites = 4
     for tag, places in [("TRA-DP", ffnn_dp_placements(nb, db, hb, lb)),

@@ -28,9 +28,12 @@ from repro.core.cost import (CostReport, HardwareModel, TPU_V5E, comm_cost,
                              cost_plan)
 from repro.core.optimize import OptimizeResult, fuse_join_agg, optimize
 from repro.core.expr import (Expr, ExprTypeError, const, einsum,  # noqa: A004
-                             input, input_like, ones_like, wrap)
+                             input, input_like, ones_like, scalar,
+                             scalar_input, wrap)
 from repro.core.autodiff import AutodiffError, grad
 from repro.core.engine import CompiledExpr, Engine
+from repro.core.train import (AdamW, Momentum, SGD, TrainStep, TraOptimizer,
+                              TraTrainer, make_train_step)
 from repro.core.interp import evaluate_ia, evaluate_tra, jit_ia_plan
 
 __all__ = [
@@ -47,8 +50,10 @@ __all__ = [
     "compile_tra", "CostReport", "HardwareModel", "TPU_V5E", "comm_cost",
     "cost_plan", "OptimizeResult", "fuse_join_agg", "optimize",
     "Expr", "ExprTypeError", "const", "einsum", "input", "input_like",
-    "ones_like", "wrap",
+    "ones_like", "scalar", "scalar_input", "wrap",
     "AutodiffError", "grad",
     "CompiledExpr", "Engine",
+    "AdamW", "Momentum", "SGD", "TrainStep", "TraOptimizer", "TraTrainer",
+    "make_train_step",
     "evaluate_ia", "evaluate_tra", "jit_ia_plan",
 ]

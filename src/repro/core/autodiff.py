@@ -34,7 +34,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.expr import Expr, wrap
+from repro.core.expr import Expr, ExprTypeError, wrap
 from repro.core.kernels_registry import JoinVjp, Kernel
 from repro.core.plan import (TraAgg, TraConcat, TraConst, TraFilter,
                              TraInput, TraJoin, TraNode, TraPad, TraReKey,
@@ -45,9 +45,19 @@ from repro.core.tra import RelType
 WrtLike = Union[str, Expr]
 
 
-class AutodiffError(ValueError):
+class AutodiffError(ExprTypeError, ValueError):
     """A forward expression (or one of its kernels) has no derivative
-    rule, or its cotangent cannot be expressed in the algebra."""
+    rule, or its cotangent cannot be expressed in the algebra.
+
+    Subclasses :class:`~repro.core.expr.ExprTypeError` (these are
+    build-time type errors of the backward expression) and ``ValueError``
+    (compatibility with pre-PR-4 callers)."""
+
+
+# aggregation kernels with a derivative rule: matAdd flows the cotangent
+# straight through (broadcast-back / direct Σ∘⋈); elemMax / elemMin route
+# it through the argmax-mask construction below
+DIFFERENTIABLE_AGGS = ("matAdd", "elemMax", "elemMin")
 
 
 # ==========================================================================
@@ -171,6 +181,28 @@ def _agg_broadcast_back(node: TraAgg, child_info: TypeInfo,
     return donor.join(G, on=(gb, tuple(range(len(gb)))), kernel="gradR")
 
 
+def _agg_minmax_vjp(node: TraAgg, child_info: TypeInfo, G: Expr) -> Expr:
+    """Backward of a max/min aggregation via the argmax-mask construction.
+
+    The cotangent of the reduced child is ``G`` routed to the extremal
+    entries only: ``mask = (child == broadcast(out))`` selects them, and
+    dividing by the broadcast tie count splits the cotangent evenly among
+    ties — exactly ``jax.grad``'s convention for ``reduce_max``.  Every
+    step is a plain TRA op (keywise joins + one matAdd aggregation), so
+    the backward plan optimizes and executes like any other."""
+    child = wrap(node.child)
+    out = wrap(node)                     # shared forward DAG node
+    k = child_info.rtype.key_arity
+    cokey = (tuple(range(k)), tuple(range(k)))
+    bo = _agg_broadcast_back(node, child_info, out)
+    bg = _agg_broadcast_back(node, child_info, G)
+    mask = child.join(bo, on=cokey, kernel="eqMask")
+    ties = mask.agg(tuple(node.group_by), "matAdd")
+    bt = _agg_broadcast_back(node, child_info, ties)
+    return mask.join(bg, on=cokey, kernel="elemMul") \
+               .join(bt, on=cokey, kernel="elemDiv")
+
+
 def _join_vjp_specs(kernel: Kernel) -> Tuple[Optional[JoinVjp],
                                              Optional[JoinVjp]]:
     v = kernel.vjp
@@ -285,10 +317,20 @@ def _backward(n: TraNode, G: Expr, infos, active, consumers, contribute,
         return
 
     if isinstance(n, TraAgg):
+        if n.kernel.name in ("elemMax", "elemMin"):
+            contribute(n.child,
+                       _agg_minmax_vjp(n, infos[id(n.child)], G))
+            return
         if n.kernel.name != "matAdd":
+            hint = ("product aggregations are not differentiable here — "
+                    "rewrite as Σ of logs where the data permits"
+                    if n.kernel.name == "elemMul" else
+                    "use a differentiable aggregation or stop the "
+                    "gradient before it")
             raise AutodiffError(
-                f"aggregation kernel {n.kernel.name} has no derivative "
-                f"rule (only matAdd aggregations are differentiable)")
+                f"aggregation kernel {n.kernel.name!r} has no derivative "
+                f"rule; differentiable aggregations are "
+                f"{', '.join(DIFFERENTIABLE_AGGS)} ({hint})")
         c = n.child
         gb = tuple(n.group_by)
         if isinstance(c, TraJoin) and consumers.get(id(c), 0) == 1 \
@@ -331,9 +373,16 @@ def _backward(n: TraNode, G: Expr, infos, active, consumers, contribute,
             if id(op) not in active:
                 continue
             if spec is None:
+                from repro.core.kernels_registry import (get_kernel,
+                                                         registered_kernels)
+                alts = [nm for nm in registered_kernels()
+                        if (kk := get_kernel(nm)).arity == 2
+                        and isinstance(kk.vjp, tuple)
+                        and all(v is not None for v in kk.vjp)]
                 raise AutodiffError(
-                    f"join kernel {n.kernel.name} has no derivative rule "
-                    f"for its {side} operand")
+                    f"join kernel {n.kernel.name!r} has no derivative "
+                    f"rule for its {side} operand; differentiable join "
+                    f"kernels include {', '.join(alts)}")
             cot = _contraction_vjp(G, side, lx, rx, n.join_keys_l,
                                    n.join_keys_r, gb, spec)
             assert cot is not None      # full gb is always feasible

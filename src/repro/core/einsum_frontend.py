@@ -25,7 +25,7 @@ from typing import List, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.kernels_registry import Kernel, get_kernel
+from repro.core.kernels_registry import JoinVjp, Kernel, get_kernel
 from repro.core.plan import (TraAgg, TraInput, TraJoin, TraNode, TraReKey,
                              TraTransform)
 from repro.core.tra import RelType
@@ -46,8 +46,20 @@ class OperandSpec:
 
 
 def _pairwise_einsum_kernel(idx_l: str, idx_r: str, idx_out: str,
-                            bl: Sequence[int], br: Sequence[int]) -> Kernel:
-    """Blockwise kernel for one binary contraction (the join's projOp)."""
+                            bl: Sequence[int], br: Sequence[int],
+                            derivative: bool = False) -> Kernel:
+    """Blockwise kernel for one binary contraction (the join's projOp).
+
+    Unless building a ``derivative`` kernel, the kernel carries its own
+    VJP pair — the classic einsum index swap: for ``out = Σ l,r → o`` the
+    operand cotangents are ``dL = Σ o,r → l`` and ``dR = Σ o,l → r``
+    (every ``idx_l`` letter appears in ``idx_out ∪ idx_r`` because the
+    §2.3 construction only contracts *shared* indices, so the swapped
+    specs are always well-formed).  The VJP kernels are parameterized
+    :class:`Kernel` objects carried directly on the :class:`JoinVjp`, and
+    :mod:`repro.core.autodiff` emits the surrounding join+aggregation —
+    the backward of an einsum expression is itself an einsum-shaped TRA
+    plan."""
     spec = f"...{idx_l},...{idx_r}->...{idx_out}"
     size = dict(zip(idx_l, bl))
     size.update(zip(idx_r, br))
@@ -56,12 +68,62 @@ def _pairwise_einsum_kernel(idx_l: str, idx_r: str, idx_out: str,
     for i in set(idx_l) | set(idx_r):
         flops *= size[i]
 
+    vjp = None
+    if not derivative:
+        bo = [size[i] for i in idx_out]
+        vjp = (
+            JoinVjp(_pairwise_einsum_kernel(idx_out, idx_r, idx_l,
+                                            bo, br, derivative=True)),
+            JoinVjp(_pairwise_einsum_kernel(idx_out, idx_l, idx_r,
+                                            bo, bl, derivative=True)),
+        )
+
     return Kernel(
         name=f"einsum[{idx_l},{idx_r}->{idx_out}]",
         arity=2,
         apply=lambda a, b: jnp.einsum(spec, a, b),
         out_bound=lambda _bl, _br: out_bound,
         flops=lambda _bl, _br: flops,
+        vjp=vjp,
+    )
+
+
+def _expand_kernel(src_idx: str, dst_idx: str,
+                   dst_sizes: Sequence[int]) -> Kernel:
+    """Broadcast blocks from ``src_idx`` order back to ``dst_idx`` shape —
+    the VJP image of a within-block trailing contraction (``dst → src``).
+    Missing indices regrow by broadcasting the cotangent."""
+    dst_sizes = tuple(dst_sizes)
+    src_in_dst = [i for i in dst_idx if i in src_idx]
+    perm = [src_idx.index(i) for i in src_in_dst]
+    missing = [ax for ax, i in enumerate(dst_idx) if i not in src_idx]
+
+    def _apply(a: jnp.ndarray) -> jnp.ndarray:
+        lead = a.ndim - len(src_idx)
+        a = jnp.transpose(a, list(range(lead)) + [lead + p for p in perm])
+        for ax in missing:
+            a = jnp.expand_dims(a, lead + ax)
+        return jnp.broadcast_to(a, a.shape[:lead] + dst_sizes)
+
+    return Kernel(
+        name=f"einsumExpand[{src_idx}->{dst_idx}]", arity=1,
+        apply=_apply,
+        out_bound=lambda b: dst_sizes,
+        flops=lambda b: 0,
+    )
+
+
+def _block_permute_kernel(src_idx: str, dst_idx: str) -> Kernel:
+    """Pure within-block axis permutation ``src_idx → dst_idx`` (its own
+    VJP is the inverse permutation)."""
+    inv = tuple(src_idx.index(i) for i in dst_idx)
+    return Kernel(
+        name=f"einsum[{src_idx}->{dst_idx}]", arity=1,
+        apply=lambda a, s=f"...{src_idx}->...{dst_idx}": jnp.einsum(s, a),
+        out_bound=lambda b, p=inv: tuple(b[i] for i in p),
+        flops=lambda b: 0,
+        vjp=lambda x, y, g, si=src_idx, di=dst_idx:
+            g.map(_block_permute_kernel(di, si)),
     )
 
 
@@ -116,6 +178,7 @@ def build_einsum(terms: Sequence[str], out_idx: str,
             # trailing contraction of indices absent from the output:
             # contract within blocks (transform) then across blocks (agg)
             keep = "".join(i for i in cur_idx if i in out_idx)
+            cur_bound = tuple(cur_sizes[i] for i in cur_idx)
             inner = Kernel(
                 name=f"einsum[{cur_idx}->{keep}]", arity=1,
                 apply=lambda a, s=f"...{cur_idx}->...{keep}":
@@ -123,6 +186,10 @@ def build_einsum(terms: Sequence[str], out_idx: str,
                 out_bound=lambda b, ci=cur_idx, kp=keep:
                     tuple(b[ci.index(i)] for i in kp),
                 flops=lambda b: int(jnp.prod(jnp.asarray(b))),
+                # d(within-block sum)/dX broadcasts the cotangent back
+                # over the summed-out block axes
+                vjp=lambda x, y, g, kp=keep, ci=cur_idx, cb=cur_bound:
+                    g.map(_expand_kernel(kp, ci, cb)),
             )
             cur = TraTransform(cur, inner)
             gb = tuple(cur_idx.index(i) for i in keep)
@@ -132,14 +199,7 @@ def build_einsum(terms: Sequence[str], out_idx: str,
             # permute both the block grid (rekey) and the block interiors
             # (transform) to the rhs order
             inv = tuple(cur_idx.index(i) for i in out_idx)
-            tpose = Kernel(
-                name=f"einsum[{cur_idx}->{out_idx}]", arity=1,
-                apply=lambda a, s=f"...{cur_idx}->...{out_idx}":
-                    jnp.einsum(s, a),
-                out_bound=lambda b, p=inv: tuple(b[i] for i in p),
-                flops=lambda b: 0,
-            )
-            cur = TraTransform(cur, tpose)
+            cur = TraTransform(cur, _block_permute_kernel(cur_idx, out_idx))
             cur = TraReKey(cur, lambda key, p=inv: tuple(key[i] for i in p),
                            tag=f"permute{inv}")
     return cur

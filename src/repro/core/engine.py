@@ -29,12 +29,14 @@ internals.
 ``run``/``compile`` accept an :class:`~repro.core.expr.Expr`, a raw
 logical ``TraNode``, an already-built physical ``IANode`` (executed as-is,
 bypassing the optimizer — how hand-compiled paper plans are priced and
-run), or a *tuple* of logical roots (multi-output programs such as the
+run), a *tuple* of logical roots (multi-output programs such as the
 §5.3 FFNN step; with ``optimize=False`` shared subexpressions are
 evaluated once across all roots, while optimizer lowering rebuilds each
-root's physical tree independently).  Input values may be
-:class:`TensorRelation`\\ s or raw arrays of the declared dense shape
-``key_shape ++ bound``.
+root's physical tree independently), or a *dict* of named roots — then
+``run`` returns ``{name: relation}``, which is how
+:class:`repro.core.train.TraTrainer` rethreads optimizer state between
+steps.  Input values may be :class:`TensorRelation`\\ s or raw arrays of
+the declared dense shape ``key_shape ++ bound``.
 """
 from __future__ import annotations
 
@@ -168,6 +170,8 @@ class CompiledExpr:
     # set by Engine.value_and_grad: names of the wrt inputs whose gradients
     # follow the value in the run() tuple
     grad_wrt: Optional[Tuple[str, ...]] = None
+    # set for dict-compiled programs: run() returns {name: relation}
+    root_names: Optional[Tuple[str, ...]] = None
 
     @property
     def plan(self):
@@ -212,6 +216,8 @@ class CompiledExpr:
                     f"masks — run on executor=\"reference\", or express "
                     f"the filter inside the plan")
         outs = self._call(env)
+        if self.root_names is not None:
+            return dict(zip(self.root_names, outs))
         return outs if self.multi else outs[0]
 
     __call__ = run
@@ -345,6 +351,13 @@ class Engine:
         """
         if chunk is not None and chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
+        root_names = None
+        if isinstance(expr, dict):
+            # named multi-root program (train-step state threading):
+            # run() returns {name: relation} so callers rethread
+            # state-out → state-in by name
+            root_names = tuple(expr)
+            expr = tuple(expr.values())
         multi = isinstance(expr, (tuple, list))
         roots = tuple(as_node(e) for e in (expr if multi else (expr,)))
         placements = dict(self.input_placements)
@@ -359,7 +372,7 @@ class Engine:
                self.fuse, self.accounting, self.try_logical_rewrites,
                _placements_sig(placements),
                _placements_sig({"·": target} if target else None),
-               multi, chunk, _grad_wrt)
+               multi, chunk, _grad_wrt, root_names)
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
@@ -368,6 +381,7 @@ class Engine:
         compiled = self._compile(roots, placements, target, executor, multi,
                                  chunk)
         compiled.grad_wrt = _grad_wrt
+        compiled.root_names = root_names
         self._cache[key] = compiled
         return compiled
 
@@ -409,10 +423,15 @@ class Engine:
 
         Each logical root is optimized *independently* — physical lowering
         rebuilds nodes, so cross-root DAG sharing only survives on the
-        unoptimized logical walk (``optimize=False``).  Multi-output
-        programs that lean on a shared forward pass should therefore
-        compile with ``optimize=False`` (as the §5.3 FFNN example does);
-        ``CompiledExpr.cost`` sums the per-root plan costs.
+        unoptimized logical walk (``optimize=False``).  On the staged
+        executors (jit/gspmd/shard_map) the duplicated lowering costs
+        compile time only — XLA CSE merges the structurally identical
+        subgraphs — and buys the fused Σ∘⋈ selection inside every root
+        (the train-step programs rely on this); on the eager
+        ``reference`` walk the duplicated roots re-execute per run, so
+        shared-forward multi-root programs there should compile with
+        ``optimize=False``.  ``CompiledExpr.cost`` sums the per-root
+        plan costs.
         """
         phys, opts = [], []
         for r in roots:

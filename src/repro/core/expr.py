@@ -145,6 +145,28 @@ class Expr:
         of σ: holes become zero tuples, the frontier grows)."""
         return _build(TraPad(self.node, tuple(key_shape)), "pad", self)
 
+    def scale_by(self, scalar: "Expr") -> "Expr":
+        """Multiply every array by a *scalar relation* (key ``(1,)``,
+        bound ``(1, 1)``).
+
+        The scalar joins in on no key dims (a broadcast join with the
+        ``scaleBy`` kernel; jnp broadcasting over the trailing block dims
+        does the arithmetic) and the appended singleton key dim is
+        aggregated away.  This is how per-step scalars — Adam bias
+        corrections, learning-rate schedules — thread through a compiled
+        train-step program as *data* instead of kernel constants, so one
+        compiled artifact serves every step (see :mod:`repro.core.train`).
+        """
+        scalar = _as_expr(scalar)
+        if scalar.key_shape != (1,) or scalar.bound != (1, 1):
+            raise ExprTypeError(
+                f"scale_by needs a scalar relation (key (1,), bound "
+                f"(1, 1) — tra.scalar / tra.scalar_input), got "
+                f"{_describe_rtype(scalar.info)}")
+        k = self.key_arity
+        j = self.join(scalar, on=((), ()), kernel="scaleBy")
+        return j.agg(tuple(range(k)), "matAdd")
+
     # -- differentiation ---------------------------------------------------
     def grad(self, wrt, seed: "Expr" = None):
         """Cotangent expression(s) of ``self`` w.r.t. input(s) ``wrt``.
@@ -244,6 +266,19 @@ def const(fill: float, key_shape: Sequence[int], bound: Sequence[int],
     Materialized locally by every executor — zero communication cost."""
     return wrap(TraConst(RelType(tuple(key_shape), tuple(bound), dtype),
                          float(fill)))
+
+
+def scalar(fill: float, dtype=jnp.float32) -> Expr:
+    """A literal *scalar relation* — key ``(1,)``, bound ``(1, 1)``.
+
+    The carrier type for per-step scalars (step counts, schedules) in
+    :mod:`repro.core.train`; apply one with :meth:`Expr.scale_by`."""
+    return const(fill, (1,), (1, 1), dtype)
+
+
+def scalar_input(name: str, dtype=jnp.float32) -> Expr:
+    """A named scalar-relation input (key ``(1,)``, bound ``(1, 1)``)."""
+    return input(name, (1,), (1, 1), dtype)
 
 
 def ones_like(e: Expr) -> Expr:

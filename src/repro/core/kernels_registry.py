@@ -46,13 +46,15 @@ class JoinVjp:
     """Derivative rule for ONE operand of a binary (join) kernel.
 
     ``kernel`` names the registered kernel computing the operand's
-    cotangent; ``cot_first`` says whether the incoming cotangent is that
-    kernel's first operand (the other forward operand is the remaining
-    one).  E.g. for ``matMul``: dL = g @ Rᵀ = ``matTranMulR(g, R)`` →
+    cotangent (or is the :class:`Kernel` itself, for parameterized
+    factory kernels such as the einsum-frontend contractions);
+    ``cot_first`` says whether the incoming cotangent is that kernel's
+    first operand (the other forward operand is the remaining one).
+    E.g. for ``matMul``: dL = g @ Rᵀ = ``matTranMulR(g, R)`` →
     ``JoinVjp("matTranMulR", cot_first=True)``.
     """
 
-    kernel: str
+    kernel: Any                       # str (registered name) or Kernel
     cot_first: bool = True
 
 
@@ -180,6 +182,25 @@ elemMul = register(Kernel(
     is_associative=True, identity=1.0,
     reduce=lambda x, axes: jnp.prod(x, axis=axes),
     vjp=(JoinVjp("elemMul"), JoinVjp("elemMul", cot_first=False)),
+))
+
+elemDiv = register(Kernel(
+    name="elemDiv", arity=2,
+    apply=lambda a, b: a / b,
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
+    # dA = g / b; dB needs both operands (−g·a/b²) — not JoinVjp-shaped
+    vjp=(JoinVjp("elemDiv"), None),
+))
+
+# exact-equality indicator — the argmax-mask primitive behind the
+# max/min aggregation VJP rules (ties get the mask at every maximal
+# entry; the autodiff rule divides by the tie count, matching jax)
+eqMask = register(Kernel(
+    name="eqMask", arity=2,
+    apply=lambda a, b: (a == b).astype(a.dtype),
+    out_bound=_same_bound,
+    flops=lambda *bs: _prod(bs[0]),
 ))
 
 elemMax = register(Kernel(
@@ -373,6 +394,141 @@ def make_scale_mul(eta: float) -> Kernel:
         distributes_over=("matAdd",),
         vjp=lambda x, y, g: g.map(make_scale_mul(eta)),
     )
+
+
+# --------------------------------------------------------------------------
+# Optimizer update-rule kernels (repro.core.train).  Updates are TRA
+# expressions over parameter / gradient / optimizer-state relations, so the
+# per-block math lives here: fused axpy for SGD, fused moment updates for
+# momentum / AdamW, and the scalar-broadcast machinery that threads the
+# step count (bias correction) through the plan as a relation instead of a
+# recompile-forcing kernel constant.
+# --------------------------------------------------------------------------
+
+def _scale_by_apply(a: jax.Array, s: jax.Array) -> jax.Array:
+    # s is a scalar-relation block: trailing (1, 1) bound under any
+    # leading key dims.  Drop the bound and re-append singletons matching
+    # a's bound rank so broadcasting can never GROW a's rank (a rank-1
+    # a-block times a (1, 1) s-block would otherwise come out rank-2).
+    if s.ndim < 2 or s.shape[-2:] != (1, 1):
+        raise ValueError(
+            f"scaleBy expects a scalar-relation right operand with "
+            f"(1, 1) blocks, got block shape {s.shape[-2:]}")
+    s2 = s[..., 0, 0]
+    return a * s2.reshape(s2.shape + (1,) * (a.ndim - s2.ndim))
+
+
+# multiply every array by a co-joined scalar block (bound (1, 1) on the
+# right — the scalar-relation carrier type).  Used by Expr.scale_by to
+# apply per-step scalars (bias corrections, schedules) without baking
+# them into kernel names.
+scaleBy = register(Kernel(
+    name="scaleBy", arity=2,
+    apply=_scale_by_apply,
+    out_bound=lambda bl, br: tuple(bl),
+    flops=lambda *bs: _prod(bs[0]),
+    vjp=(JoinVjp("scaleBy"), None),
+))
+
+# t → t + 1: the step-counter update (a (1,)-keyed scalar relation)
+stepIncr = register(Kernel(
+    name="stepIncr", arity=1,
+    apply=lambda t: t + 1.0,
+    out_bound=lambda b: tuple(b),
+    flops=lambda b: _prod(b),
+))
+
+
+def make_axpy(alpha: float) -> Kernel:
+    """Fused ``a + alpha·b`` — the SGD / update-application kernel
+    (one join instead of a scale-map plus a subtract-join)."""
+    return Kernel(
+        name=f"axpy({alpha})", arity=2,
+        apply=lambda a, b: a + alpha * b,
+        out_bound=lambda bl, br: tuple(bl),
+        flops=lambda *bs: 2 * _prod(bs[0]),
+        vjp=(JoinVjp("gradL"), JoinVjp(make_scale_mul_bin(alpha))),
+    )
+
+
+def make_scale_mul_bin(alpha: float) -> Kernel:
+    """``alpha·a`` ignoring the second operand — the axpy VJP image."""
+    return Kernel(
+        name=f"scaleMulBin({alpha})", arity=2,
+        apply=lambda a, b: alpha * a,
+        out_bound=lambda bl, br: tuple(bl),
+        flops=lambda *bs: _prod(bs[0]),
+    )
+
+
+def make_momentum(mu: float) -> Kernel:
+    """Fused heavy-ball buffer update ``mu·m + g`` (optax trace)."""
+    return Kernel(
+        name=f"momentum({mu})", arity=2,
+        apply=lambda m, g: mu * m + g,
+        out_bound=_same_bound,
+        flops=lambda *bs: 2 * _prod(bs[0]),
+    )
+
+
+def make_ema(beta: float) -> Kernel:
+    """Fused first-moment update ``beta·m + (1−beta)·g`` (Adam m)."""
+    return Kernel(
+        name=f"ema({beta})", arity=2,
+        apply=lambda m, g: beta * m + (1.0 - beta) * g,
+        out_bound=_same_bound,
+        flops=lambda *bs: 3 * _prod(bs[0]),
+    )
+
+
+def make_ema_sq(beta: float) -> Kernel:
+    """Fused second-moment update ``beta·v + (1−beta)·g²`` (Adam v)."""
+    return Kernel(
+        name=f"emaSq({beta})", arity=2,
+        apply=lambda v, g: beta * v + (1.0 - beta) * g * g,
+        out_bound=_same_bound,
+        flops=lambda *bs: 4 * _prod(bs[0]),
+    )
+
+
+def make_adam_dir(eps: float) -> Kernel:
+    """Adam update direction ``m̂ / (√v̂ + eps)`` over co-keyed moments."""
+    return Kernel(
+        name=f"adamDir({eps})", arity=2,
+        apply=lambda m, v: m / (jnp.sqrt(v) + eps),
+        out_bound=_same_bound,
+        flops=lambda *bs: 3 * _prod(bs[0]),
+    )
+
+
+def make_bias_corr(beta: float) -> Kernel:
+    """``1 / (1 − betaᵗ)`` from the step-count relation — the Adam bias
+    correction as a *data-dependent* scalar, so one compiled train-step
+    program serves every step (no per-step kernel constants)."""
+    return Kernel(
+        name=f"biasCorr({beta})", arity=1,
+        apply=lambda t: 1.0 / (1.0 - beta ** t),
+        out_bound=lambda b: tuple(b),
+        flops=lambda b: 3 * _prod(b),
+    )
+
+
+def _bce_sum(p: jax.Array, y: jax.Array) -> jax.Array:
+    """Blockwise binary-cross-entropy partial sum over rank-2 blocks:
+    Σ over the block of −[y·log(p) + (1−y)·log(1−p)] as a (1, 1) array,
+    so the total loss is the matAdd aggregation of the blocks (§5.3
+    training loss)."""
+    pc = jnp.clip(p, 1e-7, 1.0 - 1e-7)
+    ll = y * jnp.log(pc) + (1.0 - y) * jnp.log1p(-pc)
+    return jnp.sum(-ll, axis=(-2, -1), keepdims=True)
+
+
+bceSum = register(Kernel(
+    name="bceSum", arity=2,
+    apply=_bce_sum,
+    out_bound=lambda bl, br: (1, 1),
+    flops=lambda *bs: 8 * _prod(bs[0]),
+))
 
 
 def make_transpose() -> Kernel:

@@ -256,6 +256,38 @@ def ffnn_step_tra_hand(nb: int, db: int, hb: int, lb: int,
     return FFNNProgram(w1_new, w2_new, a2, g_w1, g_w2)
 
 
+def ffnn_train_step_tra(nb: int, db: int, hb: int, lb: int,
+                        bn: int, bd: int, bh: int, bl: int,
+                        optimizer=None):
+    """§5.3 FFNN as ONE compiled TRA train step: forward + BCE loss +
+    autodiff-derived backward + optimizer update, a single named
+    multi-root program (see :mod:`repro.core.train`).
+
+    The loss root is the blockwise binary-cross-entropy partial sums
+    (``bceSum`` join of ``a2`` with ``Y``, keyed by the (batch, label)
+    block grid); its array total is the scalar Σ-BCE loss whose gradient
+    w.r.t. the pre-activation ``z2`` is exactly the paper's seed
+    ``a2 − Y`` — so the backward sub-DAG is the same autodiff derivation
+    :func:`ffnn_step_tra` tests against the paper's hand expressions,
+    now composed with the optimizer's update expressions instead of the
+    fixed ``scaleMul`` SGD write-out.
+
+    ``optimizer`` is any :class:`repro.core.train.TraOptimizer`
+    (default: plain :class:`~repro.core.train.SGD` at the paper's
+    η = 0.01).  Returns a :class:`repro.core.train.TrainStep` whose
+    ``roots`` compile once and re-dispatch every step on any executor.
+    """
+    from repro.core.train import SGD, make_train_step
+    if optimizer is None:
+        optimizer = SGD(lr=0.01)
+    rx, ry, rw1, rw2, a1, z2, a2 = _ffnn_forward(
+        nb, db, hb, lb, bn, bd, bh, bl)
+    loss = a2.join(ry, on=((0, 1), (0, 1)), kernel="bceSum")
+    d_a2 = a2 - ry                       # ∂(Σ BCE(σ(z2), Y))/∂z2
+    return make_train_step(loss, ["W1", "W2"], optimizer,
+                           grad_of=z2, seed=d_a2)
+
+
 def ffnn_dp_placements(nb, db, hb, lb) -> Dict[str, Placement]:
     """TRA-DP: batch-partitioned data, weights broadcast each step
     (stored partitioned on dim 0, as the paper describes)."""

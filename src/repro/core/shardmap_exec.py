@@ -305,8 +305,14 @@ def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None):
         if out_p is not None and out_p.dup_axes:
             out_p = Placement.partitioned(out_p.dims, out_p.axes)
         out_specs.append(_pspec_for(out_p, oi.rtype))
-    fn = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                    out_specs=tuple(out_specs))
+    # jit the whole shard_map so repeat runs of a cached artifact are a
+    # single XLA dispatch — without it every call re-traces the explicit
+    # collective program eagerly, which dwarfs the kernel time for
+    # multi-root programs (the train-step loop runs one of these per
+    # step).  Everything inside is static-shape jnp (masks are rejected
+    # above), so jit is always legal here.
+    fn = jax.jit(_shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=tuple(out_specs)))
 
     def call(env: Dict[str, TensorRelation]):
         arrays = [env[n].data for n in names]

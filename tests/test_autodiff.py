@@ -114,7 +114,8 @@ def test_gradcheck_join_kernels(case, side):
     build, types = JOIN_CASES[case]
     names = ["L", "R"]
     ins = [tra.input(nm, ks, b) for nm, (ks, b) in zip(names, types)]
-    envs = {nm: _rel(i + hash(case) % 97, *t)
+    import zlib
+    envs = {nm: _rel(i + zlib.crc32(case.encode()) % 97, *t)
             for i, (nm, t) in enumerate(zip(names, types))}
     gradcheck(build(*ins), names[side], envs)
 
@@ -189,10 +190,48 @@ def test_non_differentiable_join_kernel_raises():
         e.grad("A")
 
 
-def test_non_matadd_aggregation_raises():
+def test_non_differentiable_aggregation_is_diagnosable():
+    """A product aggregation has no VJP rule — the error must be an
+    ExprTypeError naming the kernel AND the differentiable alternatives,
+    not a raw internal failure."""
+    from repro.core import ExprTypeError
     m = tra.input("M", (2, 2), (4, 4))
-    with pytest.raises(AutodiffError, match="elemMax"):
-        m.agg((0,), "elemMax").grad("M")
+    with pytest.raises(ExprTypeError, match="elemMul") as ei:
+        m.agg((0,), "elemMul").grad("M")
+    assert isinstance(ei.value, AutodiffError)
+    msg = str(ei.value)
+    for alt in ("matAdd", "elemMax", "elemMin"):
+        assert alt in msg, msg
+
+
+MINMAX_AGG_CASES = {
+    "max": lambda m: m.agg((1,), "elemMax").map("sigmoid"),
+    "min": lambda m: m.agg((0,), "elemMin"),
+    "max-all-reduced": lambda m: m.agg((0, 1), "elemMax")
+                                  .agg((1,), "elemMax"),
+    "max-then-sum": lambda m: (m * m).agg((0,), "elemMax").sum(0),
+}
+
+
+@pytest.mark.parametrize("case", sorted(MINMAX_AGG_CASES))
+def test_gradcheck_minmax_aggregations(case):
+    """max/min aggregation VJP via the argmax-mask construction vs
+    jax.grad of the dense oracle."""
+    m = tra.input("M", (2, 3), (4, 4))
+    gradcheck(MINMAX_AGG_CASES[case](m), "M",
+              {"M": _rel(17, (2, 3), (4, 4))})
+
+
+def test_gradcheck_max_agg_with_ties_matches_jax():
+    """Ties split the cotangent evenly among the maximal entries —
+    jax.grad's reduce_max convention, reproduced by the tie-count
+    division in the mask rule."""
+    m = tra.input("M", (2, 2), (3, 3))
+    base = np.arange(9, dtype=np.float32).reshape(3, 3)
+    data = jnp.asarray(np.stack([base, base, base - 1.0, base],
+                                axis=0).reshape(2, 2, 3, 3))
+    gradcheck(m.agg((1,), "elemMax"), "M",
+              {"M": TensorRelation(data, RelType((2, 2), (3, 3)))})
 
 
 def test_unknown_wrt_and_bad_seed_raise():
@@ -215,6 +254,77 @@ def test_grad_of_gradl_shape_donor_input_flows_zero():
     RM, RO = _rel(61, (2, 2), (4, 4)), _rel(62, (2, 2), (4, 4))
     np.testing.assert_allclose(np.asarray(REF.run(dm, O=RO).data), 1.0)
     np.testing.assert_allclose(np.asarray(REF.run(do, M=RM).data), 1.0)
+
+
+# ==========================================================================
+# Gradcheck sweep: einsum-built expressions (ROADMAP follow-up)
+# ==========================================================================
+
+EINSUM_CASES = {
+    # spec: one ((key_shape, bound)) per operand
+    "ij,jk->ik": [((2, 3), (4, 5)), ((3, 2), (5, 4))],
+    "ij,kj->ik": [((2, 3), (4, 5)), ((2, 3), (6, 5))],
+    "ij,ij->ij": [((2, 3), (4, 5)), ((2, 3), (4, 5))],
+    "ij,jk->ki": [((2, 3), (4, 5)), ((3, 2), (5, 4))],      # rekey permute
+    "ij->i": [((2, 3), (4, 5))],                            # trailing Σ_j
+    "ij->ji": [((2, 3), (4, 5))],                           # pure permute
+    "ij,jk,kl->il": [((2, 3), (4, 5)), ((3, 2), (5, 4)),
+                     ((2, 2), (4, 3))],                     # binary chain
+    "ij,j->i": [((2, 3), (4, 5)), ((3,), (5,))],            # matrix-vector
+    "bij,bjk->bik": [((2, 2, 3), (2, 4, 5)),
+                     ((2, 3, 2), (2, 5, 4))],               # batched
+    "ij,ik->jk": [((3, 2), (5, 4)), ((3, 2), (5, 3))],      # AᵀB shape
+}
+
+
+@pytest.mark.parametrize("spec", sorted(EINSUM_CASES))
+def test_gradcheck_einsum_exprs(spec):
+    """`Expr.grad` through `tra.einsum`-constructed programs vs jax.grad
+    of the dense oracle — every operand of every spec."""
+    import zlib
+    types = EINSUM_CASES[spec]
+    names = ["A", "B", "C"][:len(types)]
+    ins = [tra.input(nm, ks, b) for nm, (ks, b) in zip(names, types)]
+    envs = {nm: _rel(i + zlib.crc32(spec.encode()) % 91, *t)
+            for i, (nm, t) in enumerate(zip(names, types))}
+    e = tra.einsum(spec, *ins)
+    for wrt in names:
+        gradcheck(e, wrt, envs)
+
+
+def test_einsum_grad_composes_with_fluent_ops():
+    """einsum sub-exprs differentiate inside larger fluent programs (and
+    the backward of an einsum is itself an einsum-shaped TRA plan)."""
+    a = tra.input("A", (2, 3), (4, 5))
+    b = tra.input("B", (3, 2), (5, 4))
+    e = tra.einsum("ij,jk->ik", a, b).map("sigmoid").sum(0)
+    envs = {"A": _rel(71, (2, 3), (4, 5)), "B": _rel(72, (3, 2), (5, 4))}
+    for wrt in ("A", "B"):
+        gradcheck(e, wrt, envs)
+    d = e.grad("A").describe()
+    assert "einsum[" in d, d
+
+
+def test_einsum_value_and_grad_on_executors():
+    """einsum gradients run through Engine.value_and_grad on the staged
+    executors, not just the reference walk."""
+    a = tra.input("A", (2, 3), (4, 5))
+    b = tra.input("B", (3, 2), (5, 4))
+    e = tra.einsum("ij,jk->ik", a, b)
+    RA, RB = _rel(73, (2, 3), (4, 5)), _rel(74, (3, 2), (5, 4))
+    # dense oracle: block keys as capital indices — Σ over J blocks and
+    # j entries is exactly the TRA join+agg semantics
+    wgA, wgB = jax.grad(
+        lambda A, B: jnp.sum(jnp.einsum("IJij,JKjk->IKik", A, B)),
+        argnums=(0, 1))(RA.data, RB.data)
+    for executor in ("jit", "reference"):
+        eng = Engine(executor=executor, optimize=False)
+        vg = eng.value_and_grad(e, wrt=["A", "B"])
+        _, gA, gB = vg.run(A=RA, B=RB)
+        np.testing.assert_allclose(np.asarray(gA.data), np.asarray(wgA),
+                                   atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(gB.data), np.asarray(wgB),
+                                   atol=1e-5, rtol=1e-4)
 
 
 # ==========================================================================

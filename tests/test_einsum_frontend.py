@@ -7,9 +7,11 @@ import jax.numpy as jnp
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Placement, evaluate_ia, evaluate_tra, from_tensor, \
-    optimize, to_tensor
+from repro.core import Placement, from_tensor, optimize, to_tensor
 from repro.core.einsum_frontend import OperandSpec, einsum_tra
+
+from conftest import (shim_evaluate_ia as evaluate_ia,
+                      shim_evaluate_tra as evaluate_tra)
 
 CASES = [
     # (spec, shapes, tiles)

@@ -8,7 +8,6 @@ Covers the acceptance criteria of the API redesign:
 * einsum routed through the same builder;
 * deprecated shims still matching the Engine path.
 """
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -101,9 +100,8 @@ def test_nn_search_and_ffnn_exprs_match_oracle():
     env = {"xq": tra_ops.rekey(from_tensor(xq, (1, 8)), lambda k: (k[1],)),
            "X": from_tensor(Xs, (8, 8)), "A": from_tensor(Am, (8, 8))}
     got = Engine(executor="jit", optimize=False).run(prog.result, **env)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        want = tra.evaluate_tra(prog.result, env, fuse=False)
+    from conftest import shim_evaluate_tra
+    want = shim_evaluate_tra(prog.result, env, fuse=False)
     np.testing.assert_allclose(np.asarray(got.data), np.asarray(want.data),
                                rtol=1e-4, atol=1e-4)
 
@@ -118,11 +116,9 @@ def test_nn_search_and_ffnn_exprs_match_oracle():
                                                 (8, 4)), (4, 2))}
     w1n, w2n = Engine(executor="jit", optimize=False).run(
         (prog2.w1_new, prog2.w2_new), **env2)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        cache = {}
-        want1 = tra.evaluate_tra(prog2.w1_new, env2, cache)
-        want2 = tra.evaluate_tra(prog2.w2_new, env2, cache)
+    cache = {}
+    want1 = shim_evaluate_tra(prog2.w1_new, env2, cache)
+    want2 = shim_evaluate_tra(prog2.w2_new, env2, cache)
     np.testing.assert_allclose(np.asarray(w1n.data), np.asarray(want1.data),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(w2n.data), np.asarray(want2.data),

@@ -11,14 +11,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (FusedJoinAgg, Placement, RelType, TraAgg, TraInput,
-                        TraJoin, compile_tra, describe, evaluate_ia,
-                        evaluate_tra, from_tensor, fuse_join_agg,
-                        fused_join_agg, get_kernel, infer, optimize,
-                        to_tensor)
+                        TraJoin, compile_tra, describe, from_tensor,
+                        fuse_join_agg, fused_join_agg, get_kernel, infer,
+                        optimize, to_tensor)
 from repro.core import reference as ref
 from repro.core import tra
 from repro.core.cost import cost_plan
 from repro.core.programs import bmm_fused_plan, cpmm_fused_plan, cpmm_plan
+
+from conftest import (shim_evaluate_ia as evaluate_ia,
+                      shim_evaluate_tra as evaluate_tra)
 
 S = ("sites",)
 SZ = {"sites": 4}

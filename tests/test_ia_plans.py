@@ -7,10 +7,13 @@ import jax.numpy as jnp
 from repro.core import (Bcast, IAInput, LocalAgg, LocalJoin, Placement,
                         RelType, Shuf, TraAgg, TraFilter, TraInput, TraJoin,
                         TraReKey, TraTransform, check_valid, comm_cost,
-                        compile_tra, describe, evaluate_ia, evaluate_tra,
-                        from_tensor, get_kernel, infer, optimize, to_tensor)
+                        compile_tra, describe, from_tensor, get_kernel,
+                        infer, optimize, to_tensor)
 from repro.core.optimize import logical_variants
 from repro.core import tra
+
+from conftest import (shim_evaluate_ia as evaluate_ia,
+                      shim_evaluate_tra as evaluate_tra)
 
 S = ("sites",)
 SZ = {"sites": 4}

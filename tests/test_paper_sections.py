@@ -10,9 +10,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (Placement, RelType, TraAgg, TraFilter, TraInput,
                         TraJoin, TraReKey, TraTransform, comm_cost,
-                        evaluate_tra, from_tensor, get_kernel, optimize,
-                        to_tensor)
+                        from_tensor, get_kernel, optimize, to_tensor)
 from repro.core import tra
+
+from conftest import shim_evaluate_tra as evaluate_tra
 
 
 # ------------------------------------------------------------------

@@ -1,0 +1,18 @@
+"""Slow-marker bench job: the compiled-vs-eager train-step guard.
+
+Runs the full :mod:`benchmarks.train` section (which raises on guard
+failure): steps ≥ 2 of the compiled §5.3 train step must be pure
+compile-cache dispatch, the fused gradient+update plan must beat the
+unfused oracle, and the loss must decrease.  Deselect with
+``-m "not slow"`` (the tier-1 CI default); the guard runs in the bench
+job and locally via ``python -m benchmarks.run``.
+"""
+import pytest
+
+
+@pytest.mark.slow
+def test_train_step_bench_guard():
+    from benchmarks.train import run
+
+    lines = run(None)                    # raises AssertionError on FAIL
+    assert any("PASS" in line for line in lines)
