@@ -18,7 +18,8 @@ def main(argv=None) -> int:
     ap.add_argument("--with-measured", action="store_true")
     args = ap.parse_args(argv)
 
-    from benchmarks import ffnn, fusion, matmul, nn_search, roofline, train
+    from benchmarks import (ffnn, fusion, matmul, nn_search, robustness,
+                            roofline, train)
 
     sections = [
         ("§5.1 matmul (Tables 3–4)", matmul.run),
@@ -26,6 +27,7 @@ def main(argv=None) -> int:
         ("§5.3 ffnn (Tables 7–9)", ffnn.run),
         ("fused Σ∘⋈ contraction (BENCH_fusion.json)", fusion.run),
         ("TRA train step (BENCH_train.json)", train.run),
+        ("robustness overheads (BENCH_robust.json)", robustness.run),
         ("roofline (assignment g)", roofline.run),
     ]
     failures = 0

@@ -49,6 +49,7 @@ class CheckpointStore:
         self.keep = keep
         os.makedirs(base, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
 
     # -- write -------------------------------------------------------------
     def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
@@ -57,21 +58,33 @@ class CheckpointStore:
 
     def save_async(self, step: int, tree,
                    extra: Optional[Dict] = None) -> None:
-        """Snapshot now (host copy), write in the background."""
+        """Snapshot now (host copy), write in the background.
+
+        A failed background write surfaces here (or at ``wait()``) on the
+        *next* call — never silently: a swallowed I/O error would leave no
+        committed step while the trainer believes it is checkpointed.
+        """
         self.wait()
         leaves, treedef = _flatten(tree)   # device→host; blocking but fast
         extra = dict(extra or {})
 
         def work():
-            self._write(step, leaves, treedef, extra)
+            try:
+                self._write(step, leaves, treedef, extra)
+            except BaseException as e:      # surfaced by the next wait()
+                self._exc = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the pending background write; re-raise its failure."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _write(self, step: int, leaves, treedef, extra: Dict) -> str:
         final = _step_dir(self.base, step)

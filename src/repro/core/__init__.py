@@ -32,6 +32,9 @@ from repro.core.expr import (Expr, ExprTypeError, const, einsum,  # noqa: A004
                              scalar_input, wrap)
 from repro.core.autodiff import AutodiffError, grad
 from repro.core.engine import CompiledExpr, Engine
+from repro.core.faults import (CompileFailure, DeviceOOM, FaultError,
+                               FaultInjector, SimulatedFailure)
+from repro.core.guards import NumericsError
 from repro.core.train import (AdamW, Momentum, SGD, TrainStep, TraOptimizer,
                               TraTrainer, make_train_step)
 from repro.core.interp import evaluate_ia, evaluate_tra, jit_ia_plan
@@ -53,6 +56,8 @@ __all__ = [
     "ones_like", "scalar", "scalar_input", "wrap",
     "AutodiffError", "grad",
     "CompiledExpr", "Engine",
+    "CompileFailure", "DeviceOOM", "FaultError", "FaultInjector",
+    "SimulatedFailure", "NumericsError",
     "AdamW", "Momentum", "SGD", "TrainStep", "TraOptimizer", "TraTrainer",
     "make_train_step",
     "evaluate_ia", "evaluate_tra", "jit_ia_plan",

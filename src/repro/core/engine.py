@@ -41,9 +41,11 @@ the declared dense shape ``key_shape ++ bound``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import kernels_registry as kr
 from repro.core.compile import compile_tra
@@ -54,6 +56,17 @@ from repro.core.plan import (IAInput, IANode, Placement, TraInput, TraNode,
 from repro.core.tra import TensorRelation
 
 EXECUTORS = ("auto", "reference", "jit", "gspmd", "shard_map")
+
+# graceful-degradation ladders (Engine(degrade=True)): on a *compile*
+# failure of the preferred executor, fall back left-to-right; on a device
+# OOM in the fused contraction at *run* time, retry streamed with a
+# halving chunk starting here
+_EXECUTOR_FALLBACKS = {
+    "shard_map": ("jit", "reference"),
+    "gspmd": ("jit", "reference"),
+    "jit": ("reference",),
+}
+DEFAULT_OOM_LADDER_START = 64
 
 
 # ==========================================================================
@@ -172,6 +185,11 @@ class CompiledExpr:
     grad_wrt: Optional[Tuple[str, ...]] = None
     # set for dict-compiled programs: run() returns {name: relation}
     root_names: Optional[Tuple[str, ...]] = None
+    # the engine's FaultInjector (run-scoped faults hook every dispatch)
+    faults: Optional[object] = None
+    # set when Engine(degrade=True) fell back from a failed preferred
+    # executor — names that executor so callers can see the degradation
+    degraded_from: Optional[str] = None
 
     @property
     def plan(self):
@@ -192,6 +210,8 @@ class CompiledExpr:
         return "\n".join(describe(r) for r in self.roots)
 
     def run(self, **inputs) -> Union[TensorRelation, Tuple]:
+        if self.faults is not None:
+            self.faults.on_run()
         unknown = [n for n in inputs if n not in self.input_rtypes]
         if unknown:
             raise ValueError(f"unexpected inputs: {unknown}; "
@@ -285,6 +305,28 @@ class Engine:
         (default) derives a per-shape value from
         :data:`repro.core.tra.DEFAULT_CHUNK_BYTES`; ``compile(...,
         chunk=...)`` overrides per expression.
+    fault_injector:
+        Optional :class:`repro.core.faults.FaultInjector` threaded into
+        every executor — simulated site failures, device OOM, stragglers
+        and NaN poisoning fire at deterministic plan-addressable points
+        (see :mod:`repro.core.faults` for the executor-timing caveat).
+    check_numerics:
+        ``True`` adds finite checks; a NaN/Inf raises
+        :class:`repro.core.guards.NumericsError` naming the first
+        producing plan node on ``reference``/``jit`` and the failing
+        output on the distributed executors.  On ``jit`` the guard is
+        two-tier (cheap enough to leave on): the steady-state program
+        flags outputs only, and a trip triggers one deterministic
+        re-run through a lazily compiled every-node-flagged variant for
+        exact attribution.  ``"all"`` puts per-node flags in the
+        primary jit program instead (full flag traffic every dispatch;
+        no re-execution on failure).
+    degrade:
+        ``True`` enables graceful degradation: a device OOM in the fused
+        contraction retries through a halving streamed-``chunk`` backoff
+        ladder, and a failed executor compile falls back ``shard_map/gspmd
+        → jit → reference`` with one :class:`RuntimeWarning`.  Off by
+        default — without it every failure propagates unchanged.
     """
 
     def __init__(self, mesh=None, executor: str = "auto",
@@ -295,13 +337,19 @@ class Engine:
                  accounting: str = "wire",
                  try_logical_rewrites: bool = True,
                  fuse: bool = True,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None,
+                 fault_injector=None,
+                 check_numerics=False,
+                 degrade: bool = False):
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; choose from {EXECUTORS}")
         if chunk is not None and chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.mesh = mesh
+        self.fault_injector = fault_injector
+        self.check_numerics = check_numerics
+        self.degrade = degrade
         self.executor = executor
         self.optimize = optimize
         self.fuse = fuse
@@ -335,19 +383,50 @@ class Engine:
 
     # -- entry points ------------------------------------------------------
     def run(self, expr, **inputs) -> Union[TensorRelation, Tuple]:
-        """Compile (with caching) and execute in one call."""
-        return self.compile(expr).run(**inputs)
+        """Compile (with caching) and execute in one call.
+
+        With ``degrade=True`` a device OOM raised out of the fused
+        contraction (injected :class:`~repro.core.faults.DeviceOOM` or a
+        real ``RESOURCE_EXHAUSTED``) retries the expression *streamed*: the
+        fused Σ∘⋈ is forced onto the chunked ``fori_loop`` fallback with a
+        halving chunk ladder, trading arithmetic intensity for bounded
+        peak memory until a rung fits.
+        """
+        from repro.core.guards import is_oom_error
+        try:
+            return self.compile(expr).run(**inputs)
+        except Exception as err:
+            if not (self.degrade and is_oom_error(err)):
+                raise
+        start = self.chunk or DEFAULT_OOM_LADDER_START
+        warnings.warn(
+            f"device OOM in fused contraction; degrading to the streamed "
+            f"chunked fallback (halving chunk ladder from {start}) — "
+            f"consider a smaller Engine(chunk=...) or more device memory",
+            RuntimeWarning, stacklevel=2)
+        c = start
+        while True:
+            try:
+                return self.compile(expr, chunk=c, _stream=True) \
+                           .run(**inputs)
+            except Exception as err:
+                if not (is_oom_error(err) and c > 1):
+                    raise
+                c = max(1, c // 2)
 
     def compile(self, expr,
                 input_placements: Optional[Dict[str, Placement]] = None,
                 target: Optional[Placement] = None,
                 chunk: Optional[int] = None,
-                _grad_wrt: Optional[Tuple[str, ...]] = None) -> CompiledExpr:
+                _grad_wrt: Optional[Tuple[str, ...]] = None,
+                _stream: bool = False) -> CompiledExpr:
         """Compile an expression for this engine's executor.
 
         ``input_placements`` (falling back to the engine-level default)
         seed the optimizer; ``target`` constrains the result placement;
         ``chunk`` overrides the engine-level fused-path chunk size.
+        ``_stream`` (the OOM ladder's knob) forces the fused Σ∘⋈ onto the
+        chunked streaming fallback even for contraction kernel pairs.
         """
         if chunk is not None and chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -367,23 +446,80 @@ class Engine:
 
         # _grad_wrt is part of the key so a value_and_grad artifact (which
         # carries gradient semantics in .grad_wrt) never aliases a plain
-        # compile() of the structurally identical roots
+        # compile() of the structurally identical roots; the robustness
+        # fields (_stream / check_numerics / injector identity) are keyed
+        # because they are baked into the compiled callable
+        inj = self.fault_injector
         key = (tuple(plan_sig(r) for r in roots), executor, self.optimize,
                self.fuse, self.accounting, self.try_logical_rewrites,
                _placements_sig(placements),
                _placements_sig({"·": target} if target else None),
-               multi, chunk, _grad_wrt, root_names)
+               multi, chunk, _grad_wrt, root_names,
+               _stream, self.check_numerics,
+               None if inj is None else id(inj))
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
             return hit
         self.cache_misses += 1
-        compiled = self._compile(roots, placements, target, executor, multi,
-                                 chunk)
+        degraded_from = None
+        try:
+            compiled = self._compile(roots, placements, target, executor,
+                                     multi, chunk, stream=_stream)
+        except Exception as err:
+            compiled, executor, err2 = self._compile_degraded(
+                err, roots, placements, target, executor, multi, chunk,
+                _stream)
+            if compiled is None:
+                raise err2
+            degraded_from = self._resolve_executor()
+            # the degraded artifact is cached under the *fallback*
+            # executor's key (plus a marker): the preferred key stays
+            # vacant, so the next compile() retries the preferred executor
+            # and a later successful compile is never shadowed
+            key = key[:1] + (executor,) + key[2:] + ("degraded",)
         compiled.grad_wrt = _grad_wrt
         compiled.root_names = root_names
+        compiled.faults = inj
+        compiled.degraded_from = degraded_from
         self._cache[key] = compiled
         return compiled
+
+    def _compile_degraded(self, err, roots, placements, target, executor,
+                          multi, chunk, stream):
+        """Walk the executor fallback ladder after a failed compile.
+
+        Only *compile-class* failures degrade (injected
+        :class:`~repro.core.faults.CompileFailure`, ``NotImplementedError``
+        from an executor's unsupported subset, XLA runtime errors) — user
+        errors such as shape/divisibility ``ValueError`` propagate
+        unchanged.  Returns ``(compiled, executor, err)``; ``compiled`` is
+        ``None`` when no rung succeeded (re-raise ``err``).
+        """
+        from repro.core.faults import CompileFailure
+        def compile_class(e):
+            return isinstance(e, (CompileFailure, NotImplementedError)) \
+                or type(e).__name__ == "XlaRuntimeError"
+        ladder = _EXECUTOR_FALLBACKS.get(executor, ())
+        if not self.degrade or not ladder or not compile_class(err):
+            return None, executor, err
+        for fb in ladder:
+            try:
+                compiled = self._compile(roots, placements, target, fb,
+                                         multi, chunk, stream=stream)
+            except Exception as err2:
+                if not compile_class(err2):
+                    return None, executor, err2
+                err = err2
+                continue
+            warnings.warn(
+                f"executor {executor!r} failed to compile ({err}); "
+                f"degraded to executor {fb!r} for this expression — fix "
+                f"the {executor!r} failure to restore the preferred "
+                f"executor (it is retried on the next compile)",
+                RuntimeWarning, stacklevel=3)
+            return compiled, fb, err
+        return None, executor, err
 
     def value_and_grad(self, expr, wrt, seed=None,
                        input_placements: Optional[Dict[str,
@@ -449,20 +585,63 @@ class Engine:
                 phys.append(compile_tra(r, placements, self.site_axes))
         return tuple(phys), tuple(opts)
 
+    def _make_ctx(self, plans, executor, stream):
+        """Build the ExecContext threaded through the executor walks.
+
+        ``None`` when no robustness feature is active — the walks then run
+        exactly the pre-robustness code path.  Per-node finite checks run
+        eagerly on ``reference``; ``jit`` collects per-node flags in the
+        primary program only under ``check_numerics="all"`` (the default
+        ``True`` mode is two-tier — output flags steady-state, per-node
+        attribution on a lazily compiled re-run); the distributed
+        executors get output-level checks (per-node probes would perturb
+        the collective schedule under test).
+        """
+        from repro.core.guards import ExecContext, label_nodes
+        if executor == "reference":
+            per_node = self.check_numerics
+        elif executor == "jit":
+            # default jit mode flags outputs only (two-tier: the
+            # per-node attribution variant is compiled lazily on a trip)
+            per_node = "all" if self.check_numerics == "all" else False
+        else:
+            per_node = False
+        if self.fault_injector is None and not per_node and not stream:
+            return None
+        return ExecContext(faults=self.fault_injector, check=per_node,
+                           stream=stream, labels=label_nodes(plans))
+
+    @staticmethod
+    def _checked_call(call):
+        """Wrap a distributed executor's call with output finite checks."""
+        from repro.core.guards import check_output_rel
+        def wrapped(env):
+            outs = call(env)
+            for i, r in enumerate(outs):
+                check_output_rel(r, f"output[{i}]")
+            return outs
+        return wrapped
+
     def _compile(self, roots, placements, target, executor, multi,
-                 chunk) -> CompiledExpr:
+                 chunk, stream=False) -> CompiledExpr:
+        if self.fault_injector is not None:
+            self.fault_injector.on_compile(executor)
         if executor in ("gspmd", "shard_map"):
             if self.mesh is None:
                 raise ValueError(f"executor {executor!r} requires a mesh")
             phys, opts = self._physical_roots(roots, placements, target)
+            ctx = self._make_ctx(phys, executor, stream)
             out_infos = tuple(infer(p) for p in phys)
             jfn = names = None
             if executor == "gspmd":
-                call, jfn, names = self._gspmd_call(phys, out_infos, chunk)
+                call, jfn, names = self._gspmd_call(phys, out_infos, chunk,
+                                                    ctx)
             else:
                 # the shard_map callable is built ONCE here; repeat runs of
                 # a cached artifact are pure dispatch (no rebuild)
-                call = self._shardmap_call(phys, chunk)
+                call = self._shardmap_call(phys, chunk, ctx)
+            if self.check_numerics:
+                call = self._checked_call(call)
             return CompiledExpr(executor, phys, _input_nodes(phys),
                                 out_infos, call, opts, multi,
                                 jitted=jfn, input_names=names)
@@ -474,44 +653,123 @@ class Engine:
             plans, opts = self._physical_roots(roots, placements, target)
         else:
             plans, opts = roots, ()
+        ctx = self._make_ctx(plans, executor, stream)
         out_infos = tuple(infer(p) for p in plans)
         rtypes = _input_nodes(plans)
 
-        def eval_all(env):
+        def eval_all(env, ectx):
             cache: dict = {}
             outs = []
             for p in plans:
                 if isinstance(p, IANode):
                     outs.append(_evaluate_ia(p, env, _cache=cache,
-                                             chunk=chunk))
+                                             chunk=chunk, ctx=ectx))
                 else:
                     outs.append(_evaluate_tra(p, env, cache,
-                                              fuse=self.fuse, chunk=chunk))
+                                              fuse=self.fuse, chunk=chunk,
+                                              ctx=ectx))
             return tuple(outs)
 
         if executor == "reference":
             return CompiledExpr("reference", plans, rtypes, out_infos,
-                                eval_all, opts, multi)
+                                lambda env: eval_all(env, ctx), opts,
+                                multi)
 
         names = sorted(rtypes)
+        check = self.check_numerics
+        # Two-tier jit numerics guard.  Finite flags become extra
+        # (scalar) jit outputs, led by a single combined all-finite
+        # scalar: the happy path costs one host sync per dispatch.  In
+        # the default ``check_numerics=True`` mode the steady-state
+        # program flags *outputs only* (cheap — no per-node reduce
+        # traffic, no fusion breakage); when the combined flag trips,
+        # ``attribute`` lazily compiles an every-node-flagged variant of
+        # the same program and re-runs the same inputs once (the program
+        # is deterministic, injected faults included) so the error still
+        # names the first producing node in plan postorder.
+        # ``check_numerics="all"`` puts per-node flags in the primary
+        # program instead.  Flag labels are recorded at trace time
+        # (re-recorded on retrace), one list per variant.
 
-        def fn(*arrays):
-            env = {n: TensorRelation(a, rtypes[n])
-                   for n, a in zip(names, arrays)}
-            return tuple(r.data for r in eval_all(env))
+        def make_fn(ectx):
+            labels: list = []
 
+            def fn(*arrays):
+                if ectx is not None:
+                    ectx.flags.clear()   # stale flags from aborted traces
+                env = {n: TensorRelation(a, rtypes[n])
+                       for n, a in zip(names, arrays)}
+                outs = eval_all(env, ectx)
+                datas = tuple(r.data for r in outs)
+                if ectx is not None and ectx.check:
+                    pairs = ectx.take_flags()
+                elif check:
+                    from repro.core.guards import finite_flag
+                    pairs = [(f"output[{i}]", finite_flag(r.data, r.mask))
+                             for i, r in enumerate(outs)]
+                    pairs = [(la, fl) for la, fl in pairs if fl is not None]
+                else:
+                    pairs = []
+                labels[:] = [la for la, _ in pairs]
+                if not pairs:
+                    return datas
+                flags = tuple(fl for _, fl in pairs)
+                combined = flags[0]
+                for fl in flags[1:]:
+                    combined = jnp.logical_and(combined, fl)
+                return datas + (combined,) + flags
+
+            return fn, labels
+
+        fn, flag_labels = make_fn(ctx)
         jfn = jax.jit(fn)
+        nout = len(out_infos)
+        attrib: dict = {}
+
+        def attribute(args):
+            """Re-run with every node flagged; raise naming the first."""
+            from repro.core.guards import ExecContext, NumericsError, \
+                label_nodes
+            if "jfn" not in attrib:
+                ctx2 = ExecContext(faults=self.fault_injector, check="all",
+                                   stream=stream, labels=label_nodes(plans))
+                fn2, labels2 = make_fn(ctx2)
+                attrib["jfn"], attrib["labels"] = jax.jit(fn2), labels2
+            res = attrib["jfn"](*args)
+            flags = res[nout:]
+            if flags and not bool(flags[0]):
+                for lab, fl in zip(attrib["labels"], flags[1:]):
+                    if not bool(fl):
+                        raise NumericsError(
+                            f"non-finite values first produced by node "
+                            f"{lab} (jit finite-flags; plan postorder "
+                            f"attribution)", node_label=lab)
 
         def call(env):
-            datas = jfn(*(env[n].data for n in names))
+            args = tuple(env[n].data for n in names)
+            res = jfn(*args)
+            datas, flags = res[:nout], res[nout:]
+            if flags and not bool(flags[0]):
+                from repro.core.guards import NumericsError
+                if check != "all":
+                    attribute(args)   # raises when it reproduces
+                for lab, fl in zip(flag_labels, flags[1:]):
+                    if not bool(fl):
+                        raise NumericsError(
+                            f"non-finite values first produced by node "
+                            f"{lab} (jit finite-flags; plan postorder "
+                            f"attribution)", node_label=lab)
+                raise NumericsError(
+                    "non-finite values in jit outputs (attribution "
+                    "re-run did not reproduce the failure)")
             return tuple(TensorRelation(d, oi.rtype, oi.mask)
                          for d, oi in zip(datas, out_infos))
 
         return CompiledExpr("jit", plans, rtypes, out_infos, call, opts,
                             multi, jitted=jfn, input_names=tuple(names))
 
-    def _gspmd_call(self, plans, out_infos, chunk):
-        jfn, names = _jit_ia_plans(plans, self.mesh, chunk=chunk)
+    def _gspmd_call(self, plans, out_infos, chunk, ctx=None):
+        jfn, names = _jit_ia_plans(plans, self.mesh, chunk=chunk, ctx=ctx)
 
         def call(env):
             datas = jfn(*(env[n].data for n in names))
@@ -520,7 +778,7 @@ class Engine:
 
         return call, jfn, tuple(names)
 
-    def _shardmap_call(self, plans, chunk):
+    def _shardmap_call(self, plans, chunk, ctx=None):
         from repro.core.shardmap_exec import _build_shardmap
-        call, _, _ = _build_shardmap(plans, self.mesh, chunk=chunk)
+        call, _, _ = _build_shardmap(plans, self.mesh, chunk=chunk, ctx=ctx)
         return call

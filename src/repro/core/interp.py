@@ -58,7 +58,8 @@ def _warn_deprecated(old: str, new: str) -> None:
 def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
                   _cache: Optional[dict] = None,
                   fuse: bool = True,
-                  chunk: Optional[int] = None) -> TensorRelation:
+                  chunk: Optional[int] = None,
+                  ctx=None) -> TensorRelation:
     """Walk a logical plan with the dense eager ops.
 
     With ``fuse=True`` (default) every ``TraAgg(TraJoin(...))`` pair whose
@@ -67,7 +68,10 @@ def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
     more than one consumer are exempt (they are computed once and cached).
     Pass ``fuse=False`` to force the unfused pair (the correctness oracle).
     ``chunk`` forwards to the fused path's streaming reduction (``None`` =
-    bytes-based default).
+    bytes-based default).  ``ctx`` is the engine's
+    :class:`~repro.core.guards.ExecContext`; when active, every computed
+    node value passes through ``ctx.on_node`` (fault injection + per-node
+    finite checks with plan provenance).
     """
     node = as_node(node)
     cache = _cache if _cache is not None else {}
@@ -99,7 +103,7 @@ def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
                 out = tra.fused_join_agg(
                     rec(c.left), rec(c.right), c.join_keys_l,
                     c.join_keys_r, c.kernel, n.group_by, n.kernel,
-                    chunk=chunk)
+                    chunk=chunk, ctx=ctx, node=n)
             else:
                 out = tra.agg(rec(n.child), n.group_by, n.kernel)
         elif isinstance(n, TraReKey):
@@ -114,6 +118,8 @@ def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
             out = tra.concat(rec(n.child), n.key_dim, n.array_dim)
         else:
             raise TypeError(type(n))
+        if ctx is not None and ctx.active:
+            out = ctx.on_node(n, out)
         cache[id(n)] = out
         return out
 
@@ -146,7 +152,8 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
                  mesh: Optional[Mesh] = None,
                  spmd: bool = False,
                  _cache: Optional[dict] = None,
-                 chunk: Optional[int] = None) -> TensorRelation:
+                 chunk: Optional[int] = None,
+                 ctx=None) -> TensorRelation:
     """Evaluate a physical plan.
 
     With ``spmd=True`` (requires ``mesh``) every placement-bearing node gets
@@ -159,7 +166,7 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
         return cache[id(node)]
 
     def rec(n):
-        return _evaluate_ia(n, env, mesh, spmd, cache, chunk)
+        return _evaluate_ia(n, env, mesh, spmd, cache, chunk, ctx)
 
     def constrain(rel: TensorRelation, placement: Placement) -> TensorRelation:
         if not spmd or mesh is None or placement is None:
@@ -198,7 +205,8 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
         out = tra.fused_join_agg(rec(node.left), rec(node.right),
                                  node.join_keys_l, node.join_keys_r,
                                  node.join_kernel, node.group_by,
-                                 node.agg_kernel, chunk=chunk)
+                                 node.agg_kernel, chunk=chunk,
+                                 ctx=ctx, node=node)
         ti = infer(node)
         out = constrain(out, ti.placement)
     elif isinstance(node, LocalFilter):
@@ -216,6 +224,8 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
         out = tra.concat(rec(node.child), node.key_dim, node.array_dim)
     else:
         raise TypeError(type(node))
+    if ctx is not None and ctx.active:
+        out = ctx.on_node(node, out)
     cache[id(node)] = out
     return out
 
@@ -286,7 +296,8 @@ def _merge_ia_inputs(roots) -> Dict[str, IAInput]:
 
 
 def _jit_ia_plans(roots, mesh: Mesh,
-                  chunk: Optional[int] = None) -> Tuple[Callable, list]:
+                  chunk: Optional[int] = None,
+                  ctx=None) -> Tuple[Callable, list]:
     """Multi-root variant of :func:`_jit_ia_plan`: one jitted function
     ``(*arrays) -> tuple(arrays)`` executing every physical root under the
     shared SPMD input environment (required by ``Engine.value_and_grad``
@@ -302,7 +313,7 @@ def _jit_ia_plans(roots, mesh: Mesh,
         cache: dict = {}
         return tuple(
             _evaluate_ia(r, env, mesh=mesh, spmd=True, _cache=cache,
-                         chunk=chunk).data
+                         chunk=chunk, ctx=ctx).data
             for r in roots)
 
     in_shardings = tuple(

@@ -144,7 +144,8 @@ def _move(x: jax.Array, src: Placement, tgt: Placement,
     return x
 
 
-def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None):
+def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None,
+                    ctx=None):
     """Build the explicit-collective callable ONCE for a tuple of physical
     roots.
 
@@ -155,6 +156,11 @@ def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None):
     repeat executions of one plan signature are pure dispatch.  Multiple
     roots execute inside one ``shard_map`` under a shared input
     environment (the multi-output path ``Engine.value_and_grad`` needs).
+
+    ``ctx`` threads the engine's fault injector into the local walk
+    (node-scoped faults fire at trace time here — see
+    :mod:`repro.core.faults`); per-node numerics stay off inside the
+    collective program, the engine checks the outputs instead.
     """
     roots = tuple(as_node(r) for r in roots)
     cache: Dict[int, TypeInfo] = {}
@@ -234,7 +240,7 @@ def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None):
                 out = tra.fused_join_agg(
                     lrel, rrel, node.join_keys_l, node.join_keys_r,
                     node.join_kernel, node.group_by, node.agg_kernel,
-                    chunk=chunk).data
+                    chunk=chunk, ctx=ctx, node=node).data
             elif isinstance(node, LocalMap):
                 ct = cache[id(node.child)]
                 cx = rec(node.child)
@@ -284,6 +290,8 @@ def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None):
                 raise NotImplementedError("filter in shard_map mode")
             else:
                 raise TypeError(type(node))
+            if ctx is not None and ctx.faults is not None:
+                out = ctx.on_array(node, out)
             memo[id(node)] = out
             return out
 

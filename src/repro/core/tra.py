@@ -549,7 +549,8 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
                    join_keys_l: Sequence[int], join_keys_r: Sequence[int],
                    join_kernel: Kernel, group_by: Sequence[int],
                    agg_kernel: Kernel, *,
-                   chunk: Optional[int] = None) -> TensorRelation:
+                   chunk: Optional[int] = None,
+                   ctx=None, node=None) -> TensorRelation:
     """Σ_(groupBy, aggOp) ∘ ⋈_(jkl, jkr, projOp) without the grid.
 
     Semantically identical to ``agg(join(left, right, ...), group_by, ...)``
@@ -564,6 +565,12 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
       each loop step materializes; ``None`` derives it from
       :data:`DEFAULT_CHUNK_BYTES` (configurable per
       :class:`~repro.core.engine.Engine` via its ``chunk`` parameter).
+
+    ``ctx`` (an :class:`~repro.core.guards.ExecContext`) hooks the fault
+    injector's device-OOM model before each contraction lowers and, when
+    ``ctx.stream`` is set (the engine's OOM degradation ladder), forces
+    even contraction-shaped pairs onto the chunked streaming fallback so
+    peak live memory is bounded by ``chunk`` slices.
 
     Falls back to the unfused pair when nothing is actually reduced or when
     holes cannot be identity-filled — the unfused path remains the
@@ -582,7 +589,11 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
     out_key_shape = tuple(g.out_key_shape[d] for d in gb)
     out_mask = _fused_out_mask(g, gb, reduce_dims)
 
-    if agg_kernel.name == "matAdd" and join_kernel.name in _CONTRACTION_JOINS:
+    streaming = ctx is not None and ctx.stream
+    if (not streaming and agg_kernel.name == "matAdd"
+            and join_kernel.name in _CONTRACTION_JOINS):
+        if ctx is not None:
+            ctx.on_contraction(stream=False, chunk=None, node=node)
         if (join_kernel.name == "matMul" and g.lmask is None
                 and g.rmask_t is None and set(reduce_dims) == set(jkl)):
             data = _fused_matmul_2d(g, left, right, jkl, gb)
@@ -600,6 +611,8 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
         slice_floats = (math.prod(out_key_shape) if out_key_shape else 1) \
             * (math.prod(out_bound) if out_bound else 1)
         chunk = max(1, DEFAULT_CHUNK_BYTES // max(1, slice_floats * itemsize))
+    if ctx is not None:
+        ctx.on_contraction(stream=True, chunk=chunk, node=node)
     data = _fused_chunked(g, left, right, join_kernel, gb, reduce_dims,
                           agg_kernel, chunk)
     return TensorRelation(

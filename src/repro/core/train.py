@@ -37,6 +37,7 @@ chains — see the update-rule kernel section of
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
@@ -329,10 +330,35 @@ class TraTrainer:
     Works on every executor the engine supports; on the distributed
     executors pass the engine a mesh (and input placements) exactly as
     for any other program.
+
+    **Fault tolerance.**  With a :class:`repro.checkpoint.CheckpointStore`
+    (``store=`` here or per ``fit`` call), ``fit(..., ckpt_every=N)``
+    snapshots params + optimizer state (including the scalar ``opt.step``
+    relation) every N applied steps through the store's atomic async
+    writer, and recovers from a
+    :class:`~repro.core.faults.SimulatedFailure` raised mid-``fit`` by
+    restoring the last committed step and continuing.  ``fit(steps)``
+    counts *total* applied steps (``self.step_count``), so
+    ``fit(steps=K, resume=True)`` on a freshly constructed trainer — a
+    new process, possibly a new engine on a **different mesh shape** —
+    restores and finishes the remaining ``K − restored`` steps: leaves
+    are stored unsharded and the engine's input shardings re-place them
+    on first dispatch, which is the elastic re-mesh path.  The replay is
+    reproducible from the restore point because the entire optimizer
+    state is relation-valued and snapshot by root name.
+
+    **Numerics policy.**  ``skip_nonfinite=N`` skips a step whose loss is
+    non-finite (or that raised
+    :class:`~repro.core.guards.NumericsError` under the engine's
+    ``check_numerics``): params/state/step-count do not advance, the
+    event is recorded in ``self.skipped``, and more than ``N``
+    *consecutive* skips re-raise — a bounded budget, not a silent
+    spin.  ``0`` (default) disables the policy.
     """
 
     def __init__(self, engine, step: TrainStep,
-                 params: Dict[str, TensorRelation]):
+                 params: Dict[str, TensorRelation], *,
+                 store=None, skip_nonfinite: int = 0):
         missing = [nm for nm in step.param_names if nm not in params]
         if missing:
             raise ValueError(f"missing initial parameters: {missing}")
@@ -341,20 +367,126 @@ class TraTrainer:
         self.params = {nm: params[nm] for nm in step.param_names}
         self.state = step.optimizer.init_state(self.params)
         self.history: List[float] = []
+        self.store = store
+        self.skip_nonfinite = skip_nonfinite
+        self.step_count = 0
+        self.skipped: List[Tuple[int, float]] = []
+        self._consec_skips = 0
 
     def step(self, **data) -> float:
         """Run one train step; returns the scalar loss (total over the
         loss relation's arrays) and advances params/state in place."""
-        outs = self.engine.run(self.program.roots, **self.params,
-                               **self.state, **data)
-        loss = float(jnp.sum(outs[LOSS_ROOT].data))
+        from repro.core.guards import NumericsError
+        try:
+            outs = self.engine.run(self.program.roots, **self.params,
+                                   **self.state, **data)
+            loss = float(jnp.sum(outs[LOSS_ROOT].data))
+            bad = math.isnan(loss) or math.isinf(loss)
+        except NumericsError:
+            if self.skip_nonfinite <= 0:
+                raise
+            outs, loss, bad = None, float("nan"), True
+        if bad and self.skip_nonfinite > 0:
+            self._consec_skips += 1
+            self.skipped.append((self.step_count, loss))
+            if self._consec_skips > self.skip_nonfinite:
+                raise NumericsError(
+                    f"{self._consec_skips} consecutive non-finite train "
+                    f"steps at step {self.step_count} (budget "
+                    f"skip_nonfinite={self.skip_nonfinite}); params/state "
+                    f"remain at the last finite step")
+            return loss                     # params/state do NOT advance
+        self._consec_skips = 0
         self.params = {nm: outs[nm] for nm in self.program.param_names}
         self.state = {nm: outs[nm] for nm in self.program.state_names}
         self.history.append(loss)
+        self.step_count += 1
         return loss
 
-    def fit(self, steps: int, **data) -> List[float]:
-        """Run ``steps`` steps on fixed data; returns the loss history."""
-        for _ in range(steps):
-            self.step(**data)
+    # -- checkpointing -----------------------------------------------------
+    def _snapshot(self) -> Dict[str, Dict[str, object]]:
+        return {"params": {nm: r.data for nm, r in self.params.items()},
+                "state": {nm: r.data for nm, r in self.state.items()}}
+
+    def save_checkpoint(self, store=None, *, sync: bool = False) -> None:
+        """Snapshot params + optimizer state at ``self.step_count``.
+
+        Async by default (the atomic COMMIT protocol makes a crash
+        mid-write unreadable rather than corrupt); ``sync=True`` blocks.
+        """
+        store = store if store is not None else self.store
+        if store is None:
+            raise ValueError("no CheckpointStore configured")
+        extra = {"step_count": self.step_count,
+                 "history": list(self.history)}
+        if sync:
+            store.save(self.step_count, self._snapshot(), extra)
+        else:
+            store.save_async(self.step_count, self._snapshot(), extra)
+
+    def restore_checkpoint(self, store=None,
+                           step: Optional[int] = None) -> int:
+        """Restore params/state by root name from the last committed step.
+
+        Leaves come back as unsharded host arrays and are rebuilt into
+        relations with the *program's* declared rtypes — the current
+        engine re-places them (different mesh included) on its next
+        dispatch.  Returns the restored step count.
+        """
+        store = store if store is not None else self.store
+        if store is None:
+            raise ValueError("no CheckpointStore configured")
+        tree, extra = store.restore(self._snapshot(), step)
+        self.params = {nm: TensorRelation(jnp.asarray(tree["params"][nm]),
+                                          self.params[nm].rtype)
+                       for nm in self.params}
+        self.state = {nm: TensorRelation(jnp.asarray(tree["state"][nm]),
+                                         self.state[nm].rtype)
+                      for nm in self.state}
+        self.step_count = int(extra["step_count"])
+        self.history = [float(x) for x in extra.get("history", [])]
+        self._consec_skips = 0
+        return self.step_count
+
+    def fit(self, steps: int, *, store=None,
+            ckpt_every: Optional[int] = None, resume: bool = False,
+            max_recoveries: int = 3, **data) -> List[float]:
+        """Train until ``step_count`` reaches ``steps`` on fixed data.
+
+        ``ckpt_every`` snapshots every N applied steps (async, atomic);
+        ``resume=True`` first restores the last committed checkpoint (a
+        store with no committed step starts fresh); an in-flight
+        :class:`~repro.core.faults.SimulatedFailure` triggers restore +
+        continue, at most ``max_recoveries`` times.  Returns the loss
+        history (restored prefix included).
+        """
+        from repro.core.faults import SimulatedFailure
+        store = store if store is not None else self.store
+        if (resume or ckpt_every) and store is None:
+            raise ValueError("fit(ckpt_every=/resume=) needs a store")
+        if resume:
+            try:
+                self.restore_checkpoint(store)
+            except FileNotFoundError:
+                pass                        # nothing committed: fresh start
+        if store is not None and ckpt_every and store.latest_step() is None:
+            # commit the initial state so a failure before the first
+            # periodic snapshot still has a restore point
+            self.save_checkpoint(store, sync=True)
+        recoveries = 0
+        while self.step_count < steps:
+            try:
+                self.step(**data)
+            except SimulatedFailure:
+                if store is None or recoveries >= max_recoveries:
+                    raise
+                recoveries += 1
+                store.wait()                # surface a failed async write
+                self.restore_checkpoint(store)
+                continue
+            if store is not None and ckpt_every \
+                    and self.step_count % ckpt_every == 0:
+                self.save_checkpoint(store)
+        if store is not None:
+            store.wait()
         return self.history

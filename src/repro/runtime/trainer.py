@@ -44,9 +44,9 @@ from repro.optim import schedule as schedules
 from repro.sharding import (batch_pspecs, make_sharder, param_pspecs,
                             plan_arch, zero1_pspecs)
 
-
-class SimulatedFailure(RuntimeError):
-    pass
+# canonical definition lives with the TRA fault model; re-exported here so
+# the dense trainer and the TRA trainer recover from the same fault type
+from repro.core.faults import SimulatedFailure  # noqa: F401
 
 
 @dataclasses.dataclass

@@ -283,6 +283,68 @@ def check_train_step_8dev():
         print(f"  TRA train step on {executor} (8 devices): OK")
 
 
+def check_elastic_tra_resume_8dev():
+    """ISSUE-6 tentpole: TraTrainer checkpoint → injected kill →
+    auto-recovery, then a FRESH trainer restores onto a DIFFERENT mesh
+    shape ((8,) → (4, 2)) and finishes; the full 8-step loss trajectory
+    matches the uninterrupted single-device oracle at 1e-5.  Leaves are
+    stored unsharded, so the new engine's input shardings re-place them
+    on first dispatch — the elastic re-mesh path."""
+    import tempfile
+
+    from repro.checkpoint import CheckpointStore
+    from repro.core import AdamW, TraTrainer
+    from repro.core.faults import FaultInjector
+    from repro.core.programs import ffnn_train_step_tra
+
+    dims = (8, 2, 2, 2, 4, 4, 4, 2)
+    nb, db, hb, lb, bn, bd, bh, bl = dims
+    N, D, H, L = nb * bn, db * bd, hb * bh, lb * bl
+    X = jax.random.normal(jax.random.PRNGKey(30), (N, D))
+    Y = jax.nn.sigmoid(
+        X @ (jax.random.normal(jax.random.PRNGKey(31), (D, L)) * 0.5))
+    W1 = jax.random.normal(jax.random.PRNGKey(32), (D, H)) * 0.3
+    W2 = jax.random.normal(jax.random.PRNGKey(33), (H, L)) * 0.3
+    data = dict(X=from_tensor(X, (bn, bd)), Y=from_tensor(Y, (bn, bl)))
+
+    def params():
+        return {"W1": from_tensor(W1, (bd, bh)),
+                "W2": from_tensor(W2, (bh, bl))}
+
+    def trainer(engine, **kw):
+        return TraTrainer(engine, ffnn_train_step_tra(
+            *dims, optimizer=AdamW(1e-2)), params=params(), **kw)
+
+    oracle = trainer(Engine(executor="jit", optimize=False)).fit(8, **data)
+
+    with tempfile.TemporaryDirectory() as d:
+        store = CheckpointStore(d, keep=5)
+        places1 = {"X": Placement.partitioned((0,), ("sites",)),
+                   "Y": Placement.partitioned((0,), ("sites",)),
+                   "W1": Placement.replicated(),
+                   "W2": Placement.replicated()}
+        inj = FaultInjector().inject_site_failure(step=5)
+        tr = trainer(Engine(mesh1d(), executor="gspmd",
+                            input_placements=places1, fault_injector=inj),
+                     store=store)
+        h = tr.fit(6, ckpt_every=2, **data)
+        assert inj.log == [("site", "run 5")], inj.log
+        assert tr.step_count == 6
+        np.testing.assert_allclose(h, oracle[:6], atol=1e-5)
+
+        # fresh trainer, DIFFERENT mesh shape: (8,) → (4, 2)
+        places2 = {"X": Placement.partitioned((0,), ("s0",)),
+                   "Y": Placement.partitioned((0,), ("s0",)),
+                   "W1": Placement.replicated(),
+                   "W2": Placement.replicated()}
+        tr2 = trainer(Engine(mesh2d(), executor="gspmd", site_axes=("s0",),
+                             input_placements=places2), store=store)
+        h2 = tr2.fit(8, resume=True, **data)
+        assert tr2.step_count == 8
+        np.testing.assert_allclose(h2, oracle, atol=1e-5)
+    print("  elastic TRA checkpoint/resume across mesh shapes: OK")
+
+
 if __name__ == "__main__":
     assert jax.device_count() == 8, jax.device_count()
     check_shardmap_strategies()
@@ -292,4 +354,5 @@ if __name__ == "__main__":
     check_two_phase_other_reducers()
     check_multi_root_and_value_and_grad()
     check_train_step_8dev()
+    check_elastic_tra_resume_8dev()
     print("ALL DISTRIBUTED CHECKS PASSED")
