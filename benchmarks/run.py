@@ -19,7 +19,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (ffnn, fusion, matmul, nn_search, robustness,
-                            roofline, train)
+                            roofline, serve, train)
 
     sections = [
         ("§5.1 matmul (Tables 3–4)", matmul.run),
@@ -28,6 +28,7 @@ def main(argv=None) -> int:
         ("fused Σ∘⋈ contraction (BENCH_fusion.json)", fusion.run),
         ("TRA train step (BENCH_train.json)", train.run),
         ("robustness overheads (BENCH_robust.json)", robustness.run),
+        ("serving: continuous batching (BENCH_serve.json)", serve.run),
         ("roofline (assignment g)", roofline.run),
     ]
     failures = 0

@@ -1,0 +1,207 @@
+"""Serving benchmark: continuous batching vs per-request serial dispatch.
+
+Exercises the end-to-end serving acceptance for this repo's TRA serving
+engine (:mod:`repro.serve`) and guards the numbers that make continuous
+batching worth having:
+
+* **mixed scorer stream** — the §5.3 FFNN scorer under a Poisson
+  open-loop stream (≥100 requests hitting ≥3 bucket shapes) on the
+  reference and jit executors: every response must match the
+  per-request dense oracle at 1e-5 and the compile cache must take
+  ZERO misses after warmup (the long-lived-artifact invariant);
+* **LM decode throughput** — the smoke recurrent LM decoding a fixed
+  workload two ways over the SAME compiled step artifact: continuous
+  batching at concurrency 8 vs strictly serial one-request-at-a-time.
+  Guard: batched tokens/s ≥ ``SPEEDUP_MIN``× serial (the batched step
+  amortizes one fixed-capacity dispatch over up to 8 live slots);
+* **step-latency tail** — p99 of the batched scheduler tick must stay
+  within ``P99_STEP_FACTOR``× the *median* solo tick: same artifact,
+  same shapes, so a fat tail would mean the scheduler (packing,
+  eviction, state threading) is leaking cost into the hot loop.
+
+Emits ``BENCH_serve.json`` next to the repo root and raises on guard
+failure — wired into ``benchmarks/run.py``; ``--smoke`` shrinks the
+stream for the CI smoke step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from typing import Dict, List
+
+SCORER_REQUESTS = 120
+# three-phase arrival rates (requests/s): slow trickle -> solo buckets,
+# medium -> small batches, burst -> full buckets; guarantees the stream
+# exercises ≥3 bucket shapes regardless of host speed
+SCORER_RATES = (30.0, 300.0, 3000.0)
+LM_REQUESTS = 24
+LM_PROMPT, LM_GEN = 4, 12
+LM_CAPACITY = 8
+SPEEDUP_MIN = 2.0                        # batched ≥ 2× serial tokens/s
+P99_STEP_FACTOR = 5.0                    # batched p99 tick ≤ 5× solo median
+
+
+def _dims(smoke: bool) -> Dict[str, int]:
+    return {"scorer_requests": 30 if smoke else SCORER_REQUESTS,
+            "lm_requests": 8 if smoke else LM_REQUESTS}
+
+
+def bench_scorer_stream(executor: str, n_requests: int) -> Dict:
+    """Poisson mixed stream through the bucketed scorer; oracle-check."""
+    import numpy as np
+
+    from repro.core import Engine
+    from repro.serve import FFNNScorer, TraServer, open_loop, scorer_mix
+
+    rng = np.random.default_rng(0)
+    engine = Engine(executor=executor)
+    scorer = FFNNScorer()
+    server = TraServer(engine, scorer)
+    server.warmup()
+    payloads = scorer_mix(scorer, rng, n_requests)
+    arrivals, t = [], 0.0
+    seg = n_requests // len(SCORER_RATES)
+    for i, rate in enumerate(SCORER_RATES):
+        count = seg if i < len(SCORER_RATES) - 1 \
+            else n_requests - seg * (len(SCORER_RATES) - 1)
+        for gap in rng.exponential(1.0 / rate, size=count):
+            t += gap
+            arrivals.append(t)
+    report = open_loop(server, payloads, arrivals)
+    assert report.errors == 0, f"{report.errors} failed requests"
+    worst = 0.0
+    for p, r in zip(payloads, report.results):
+        worst = max(worst, float(np.abs(r - scorer.oracle(p)).max()))
+    # bucket coverage from dispatch counts: each pinned artifact is one
+    # bucket program, so distinct dispatched artifacts = bucket shapes hit
+    dispatched = [a for a, n in server.dispatches.items() if n > 0]
+    rec = {
+        "executor": executor,
+        "requests": report.requests,
+        "tokens_per_s": round(report.tokens_per_s, 1),
+        "total_ms": report.summary["total_ms"],
+        "queue_wait_ms": report.summary["queue_wait_ms"],
+        "service_ms": report.summary["service_ms"],
+        "bucket_shapes_hit": len(dispatched),
+        "cache_misses_after_warmup": server.cache_misses_since_warmup,
+        "oracle_max_abs_err": worst,
+    }
+    return rec
+
+
+def _drive_lm(executor: str, reqs, concurrency: int) -> Dict:
+    """Decode ``reqs`` at the given concurrency, timing every tick."""
+    from repro.core import Engine
+    from repro.launch.metering import SpanMeter
+    from repro.serve import LmRequest, RecurrentLM, TraServer
+
+    engine = Engine(executor=executor)
+    lm = RecurrentLM(d_model=64, vocab_size=256, capacity=LM_CAPACITY)
+    server = TraServer(engine, lm)
+    server.warmup()
+    # pay the first-dispatch XLA compile outside the clock, then start
+    # the meter fresh so the timed run sees steady-state ticks only
+    server.serve([LmRequest(prompt=[0], max_new_tokens=1)])
+    server.meter = SpanMeter()
+    ticks: List[float] = []
+    t0 = time.perf_counter()
+    pending = list(reqs)
+    inflight = []
+    while pending or not server.idle():
+        while pending and len(inflight) < concurrency:
+            inflight.append(server.submit(pending.pop(0)))
+        t1 = time.perf_counter()
+        server.step()
+        ticks.append((time.perf_counter() - t1) * 1e3)
+        inflight = [h for h in inflight if not h.done()]
+    wall = time.perf_counter() - t0
+    tokens = server.meter.summary()["tokens"]
+    misses = server.cache_misses_since_warmup
+    assert misses == 0, f"{misses} cache misses after warmup"
+    return {"concurrency": concurrency,
+            "tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 1),
+            "tick_ms_median": round(statistics.median(ticks), 3),
+            "tick_ms_p99": round(sorted(ticks)[int(0.99 * len(ticks))
+                                               if len(ticks) > 1 else 0], 3),
+            "ticks": len(ticks)}
+
+
+def bench_lm_throughput(executor: str, n_requests: int) -> Dict:
+    """Continuous batching vs per-request serial on one compiled step."""
+    from repro.serve import LmRequest
+
+    reqs = [LmRequest(prompt=[(7 * i + j) % 256 for j in range(LM_PROMPT)],
+                      max_new_tokens=LM_GEN) for i in range(n_requests)]
+    serial = _drive_lm(executor, reqs, concurrency=1)
+    batched = _drive_lm(executor, reqs, concurrency=LM_CAPACITY)
+    assert batched["tokens"] == serial["tokens"] == n_requests * LM_GEN
+    return {
+        "executor": executor,
+        "requests": n_requests,
+        "gen_tokens_each": LM_GEN,
+        "capacity": LM_CAPACITY,
+        "serial": serial,
+        "batched": batched,
+        "speedup": round(batched["tokens_per_s"]
+                         / max(serial["tokens_per_s"], 1e-9), 2),
+        "p99_tick_vs_solo_median": round(
+            batched["tick_ms_p99"] / max(serial["tick_ms_median"], 1e-9), 2),
+    }
+
+
+def run(mesh=None, smoke: bool = False) -> List[str]:
+    dims = _dims(smoke)
+    streams = [bench_scorer_stream(ex, dims["scorer_requests"])
+               for ex in ("reference", "jit")]
+    lm = bench_lm_throughput("jit", dims["lm_requests"])
+    out = {"smoke": smoke, "scorer_streams": streams, "lm": lm,
+           "speedup_min": SPEEDUP_MIN, "p99_step_factor": P99_STEP_FACTOR}
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+
+    lines = ["# TRA serving: continuous batching over compiled plans"]
+    for s in streams:
+        lines.append(
+            f"scorer stream [{s['executor']}]: {s['requests']} requests "
+            f"@ {s['tokens_per_s']:.0f} req/s, p50/p99 "
+            f"{s['total_ms']['p50']:.1f}/{s['total_ms']['p99']:.1f} ms, "
+            f"{s['bucket_shapes_hit']} bucket shapes, "
+            f"{s['cache_misses_after_warmup']} cache misses after warmup, "
+            f"oracle err {s['oracle_max_abs_err']:.2e}")
+    lines.append(
+        f"lm decode [jit]: serial {lm['serial']['tokens_per_s']:.1f} tok/s "
+        f"-> batched(x{lm['capacity']}) "
+        f"{lm['batched']['tokens_per_s']:.1f} tok/s "
+        f"(speedup ×{lm['speedup']:.2f}); batched p99 tick "
+        f"{lm['batched']['tick_ms_p99']:.1f} ms vs solo median "
+        f"{lm['serial']['tick_ms_median']:.1f} ms "
+        f"(×{lm['p99_tick_vs_solo_median']:.2f})")
+
+    ok_misses = all(s["cache_misses_after_warmup"] == 0 for s in streams)
+    ok_oracle = all(s["oracle_max_abs_err"] <= 1e-5 for s in streams)
+    ok_buckets = all(s["bucket_shapes_hit"] >= (2 if smoke else 3)
+                     for s in streams)
+    ok_speed = lm["speedup"] >= SPEEDUP_MIN
+    ok_tail = lm["p99_tick_vs_solo_median"] <= P99_STEP_FACTOR
+    ok = ok_misses and ok_oracle and ok_buckets and ok_speed and ok_tail
+    lines.append(
+        f"serving guard (0 misses after warmup, oracle ≤1e-5, "
+        f"≥{'2' if smoke else '3'} buckets, batched ≥"
+        f"{SPEEDUP_MIN:.0f}× serial tok/s, p99 tick ≤"
+        f"{P99_STEP_FACTOR:.0f}× solo median): "
+        f"{'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise AssertionError(f"serving guard failed: {out}")
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    print("\n".join(run(smoke=ap.parse_args().smoke)))

@@ -1,73 +1,61 @@
-"""Serving example: batched prefill + greedy decode with a KV cache.
+"""Serving example: continuous batching with TraServer.
 
-    PYTHONPATH=src python examples/serve_decode.py [--arch gemma2-2b]
+    PYTHONPATH=src python examples/serve_decode.py [--requests 24]
 
-Uses the reduced (smoke) config of the chosen architecture so it runs on
-CPU; the identical code path serves full configs on a pod (see
-repro.launch.serve, which adds TRA-planned cache sharding).
+Builds the smoke step-decode LM sized from the gemma2 smoke config,
+serves a mixed stream of prompt/generation lengths through
+:class:`~repro.serve.server.TraServer` (token-level continuous batching
+over a fixed-capacity slot-keyed state relation), and checks a few
+responses against the per-request dense oracle.  The dense-transformer
+prefill/decode comparison loop lives in
+``python -m repro.launch.serve --dense-oracle``.
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import numpy as np
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, list_archs
-from repro.models import decode_step, init_params, prefill
+from repro.configs import get_config
+from repro.core import Engine
+from repro.serve import RecurrentLM, TraServer, lm_mix
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-2b", choices=list_archs())
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--executor", default="jit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
-    cache_len = args.prompt_len + args.gen
-    key = jax.random.PRNGKey(0)
-    params = init_params(cfg, key)
-    B, S = args.batch, args.prompt_len
+    lm = RecurrentLM.from_config(cfg, capacity=args.capacity)
+    engine = Engine(executor=args.executor)
+    server = TraServer(engine, lm)
+    server.warmup()
+    print(f"[{cfg.name}] serving {lm.name} (d={lm.d}, vocab={lm.vocab}) "
+          f"with {lm.capacity} decode slots on executor={engine.executor}")
 
-    if cfg.input_mode == "tokens":
-        batch = {"tokens": jax.random.randint(key, (B, S), 0,
-                                              cfg.vocab_size)}
-    else:
-        batch = {"embeds": jax.random.normal(key, (B, S, cfg.d_model),
-                                             jnp.bfloat16)}
-
-    pf = jax.jit(lambda p, b: prefill(cfg, p, b, cache_len))
+    rng = np.random.default_rng(0)
+    reqs = lm_mix(lm, rng, args.requests, prompt_len=(1, 6),
+                  new_tokens=(2, 12))
     t0 = time.perf_counter()
-    logits, cache = pf(params, batch)
-    jax.block_until_ready(logits)
-    print(f"[{cfg.name}] prefill {B}×{S}: "
-          f"{(time.perf_counter() - t0) * 1e3:.1f} ms "
-          f"(cache capacity {cache_len})")
+    results = server.serve(reqs)
+    dt = time.perf_counter() - t0
 
-    step = jax.jit(lambda p, c, b: decode_step(cfg, p, c, b),
-                   donate_argnums=(1,))
-    tok = logits.argmax(-1).astype(jnp.int32)
-    seqs = [jax.device_get(tok)[:, 0]]
-    t1 = time.perf_counter()
-    for _ in range(args.gen - 1):
-        if cfg.input_mode == "tokens":
-            inp = {"token": tok}
-        else:
-            inp = {"embed": jax.random.normal(key, (B, 1, cfg.d_model),
-                                              jnp.bfloat16)}
-        logits, cache = step(params, cache, inp)
-        tok = logits.argmax(-1).astype(jnp.int32)
-        seqs.append(jax.device_get(tok)[:, 0])
-    jax.block_until_ready(logits)
-    dt = time.perf_counter() - t1
-    print(f"decode {args.gen - 1} steps: {B * (args.gen - 1) / dt:.1f} "
-          f"tok/s aggregate")
-    for b in range(min(B, 2)):
-        print(f"  seq {b}: {[int(s[b]) for s in seqs]}")
+    total = sum(len(r["tokens"]) for r in results)
+    print(f"decoded {total} tokens for {len(reqs)} requests in "
+          f"{dt * 1e3:.1f} ms ({total / dt:.1f} tok/s, continuous batching)")
+    for i in (0, 1):
+        oracle_tokens, _ = lm.oracle_decode(reqs[i].prompt,
+                                            reqs[i].max_new_tokens)
+        match = "matches" if results[i]["tokens"] == oracle_tokens \
+            else "MISMATCHES"
+        print(f"  req {i}: prompt {reqs[i].prompt} -> "
+              f"{results[i]['tokens']} ({match} per-request oracle)")
+    stats = server.stats()
+    print(f"cache: {len(stats['artifacts'])} pinned artifact(s), "
+          f"{stats['cache_misses_since_warmup']} misses after warmup")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,8 @@ from repro.core.kernels_registry import (JoinVjp, Kernel, compose,
                                          get_kernel, register,
                                          registered_kernels)
 from repro.core.tra import (RelType, TensorRelation, can_fuse, from_tensor,
-                            fused_join_agg, to_tensor)
+                            fused_join_agg, pack_rows, scatter_rows,
+                            to_tensor, unpack_rows, zero_rows)
 from repro.core.plan import (Bcast, FusedJoinAgg, IAConst, IAInput, LocalAgg,
                              LocalConcat, LocalFilter, LocalJoin, LocalMap,
                              LocalPad, LocalTile, Placement, Shuf, TraAgg,
@@ -31,7 +32,7 @@ from repro.core.expr import (Expr, ExprTypeError, const, einsum,  # noqa: A004
                              input, input_like, ones_like, scalar,
                              scalar_input, wrap)
 from repro.core.autodiff import AutodiffError, grad
-from repro.core.engine import CompiledExpr, Engine
+from repro.core.engine import CacheEntry, CompiledExpr, Engine
 from repro.core.faults import (CompileFailure, DeviceOOM, FaultError,
                                FaultInjector, SimulatedFailure)
 from repro.core.guards import NumericsError
@@ -43,7 +44,8 @@ __all__ = [
     "JoinVjp", "Kernel", "compose", "get_kernel", "register",
     "registered_kernels",
     "RelType", "TensorRelation", "can_fuse", "from_tensor",
-    "fused_join_agg", "to_tensor",
+    "fused_join_agg", "pack_rows", "scatter_rows", "to_tensor",
+    "unpack_rows", "zero_rows",
     "Bcast", "FusedJoinAgg", "IAConst", "IAInput", "LocalAgg", "LocalConcat",
     "LocalFilter", "LocalJoin", "LocalMap", "LocalPad", "LocalTile",
     "Placement", "Shuf",
@@ -55,7 +57,7 @@ __all__ = [
     "Expr", "ExprTypeError", "const", "einsum", "input", "input_like",
     "ones_like", "scalar", "scalar_input", "wrap",
     "AutodiffError", "grad",
-    "CompiledExpr", "Engine",
+    "CacheEntry", "CompiledExpr", "Engine",
     "CompileFailure", "DeviceOOM", "FaultError", "FaultInjector",
     "SimulatedFailure", "NumericsError",
     "AdamW", "Momentum", "SGD", "TrainStep", "TraOptimizer", "TraTrainer",

@@ -41,6 +41,7 @@ the declared dense shape ``key_shape ++ bound``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
@@ -190,6 +191,10 @@ class CompiledExpr:
     # set when Engine(degrade=True) fell back from a failed preferred
     # executor — names that executor so callers can see the degradation
     degraded_from: Optional[str] = None
+    # stable process-local id ("<executor>:<sig digest>") assigned by the
+    # engine at compile time; serving layers report which artifact served
+    # a request by this id (see Engine.cache_info)
+    artifact_id: Optional[str] = None
 
     @property
     def plan(self):
@@ -241,6 +246,36 @@ class CompiledExpr:
         return outs if self.multi else outs[0]
 
     __call__ = run
+
+
+@dataclasses.dataclass
+class _CacheSlot:
+    """Internal compile-cache slot: artifact + per-entry accounting."""
+
+    compiled: CompiledExpr
+    hits: int = 0
+    pinned: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheEntry:
+    """One compile-cache entry as reported by :meth:`Engine.cache_info`.
+
+    ``signature`` is the full structural cache key (plan signatures,
+    executor, optimizer configuration, …); ``artifact_id`` is its short
+    digest — the id a serving layer logs per request.  ``degraded`` marks
+    artifacts cached by the ``Engine(degrade=True)`` executor-fallback
+    ladder under the fallback executor's key.
+    """
+
+    artifact_id: str
+    executor: str
+    hits: int
+    pinned: bool
+    degraded: bool
+    root_names: Optional[Tuple[str, ...]]
+    signature: Tuple
+    compiled: CompiledExpr
 
 
 def _coerce(name: str, value, rtype) -> TensorRelation:
@@ -368,9 +403,65 @@ class Engine:
                           if mesh is not None
                           else {a: 1 for a in self.site_axes})
         self.axis_sizes = dict(axis_sizes)
-        self._cache: Dict[Tuple, CompiledExpr] = {}
+        self._cache: Dict[Tuple, _CacheSlot] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+
+    # -- compile-cache introspection --------------------------------------
+    def cache_info(self) -> Tuple[CacheEntry, ...]:
+        """Per-entry view of the compile cache, in insertion order.
+
+        Each entry carries the structural ``signature`` (the full cache
+        key), the resolved ``executor``, the per-entry ``hits`` count
+        (``sum(e.hits for e in cache_info()) == engine.cache_hits``), the
+        ``pinned`` flag, and the ``degraded`` marker for artifacts the
+        degradation ladder cached under a fallback executor.  This is how
+        :class:`repro.serve.TraServer` reports which artifact served a
+        request and how tests assert steady-state serving is 100% cache
+        hits.
+        """
+        out = []
+        for key, slot in self._cache.items():
+            out.append(CacheEntry(
+                artifact_id=slot.compiled.artifact_id or "?",
+                executor=slot.compiled.executor,
+                hits=slot.hits,
+                pinned=slot.pinned,
+                degraded=key[-1] == "degraded",
+                root_names=slot.compiled.root_names,
+                signature=key,
+                compiled=slot.compiled))
+        return tuple(out)
+
+    def pin(self, compiled: CompiledExpr) -> CompiledExpr:
+        """Pin a compiled artifact: ``cache_clear()`` keeps it by default.
+
+        Long-lived serving artifacts are pinned so periodic cache hygiene
+        (or an explicit ``cache_clear()``) never evicts the programs the
+        request path dispatches to.
+        """
+        for slot in self._cache.values():
+            if slot.compiled is compiled:
+                slot.pinned = True
+                return compiled
+        raise ValueError(
+            f"artifact {compiled.artifact_id!r} is not in this engine's "
+            f"compile cache (compiled by another engine?)")
+
+    def cache_clear(self, *, pinned: bool = False) -> int:
+        """Drop cache entries; ``pinned=True`` also drops pinned ones.
+
+        Returns the number of entries evicted.  Hit/miss counters are
+        cumulative and unaffected.
+        """
+        if pinned:
+            n = len(self._cache)
+            self._cache.clear()
+            return n
+        keep = {k: s for k, s in self._cache.items() if s.pinned}
+        n = len(self._cache) - len(keep)
+        self._cache = keep
+        return n
 
     # -- kernel registry view ---------------------------------------------
     @staticmethod
@@ -460,7 +551,8 @@ class Engine:
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
-            return hit
+            hit.hits += 1
+            return hit.compiled
         self.cache_misses += 1
         degraded_from = None
         try:
@@ -482,7 +574,10 @@ class Engine:
         compiled.root_names = root_names
         compiled.faults = inj
         compiled.degraded_from = degraded_from
-        self._cache[key] = compiled
+        compiled.artifact_id = (
+            f"{compiled.executor}:"
+            f"{hashlib.sha1(repr(key).encode()).hexdigest()[:10]}")
+        self._cache[key] = _CacheSlot(compiled)
         return compiled
 
     def _compile_degraded(self, err, roots, placements, target, executor,

@@ -167,6 +167,36 @@ class Expr:
         j = self.join(scalar, on=((), ()), kernel="scaleBy")
         return j.agg(tuple(range(k)), "matAdd")
 
+    def slot_update(self, rows: "Expr", mask: "Expr") -> "Expr":
+        """Masked in-plan slot update: ``mask·rows + (1−mask)·self``.
+
+        The carrier of continuous-batching decode state
+        (:mod:`repro.serve`): ``self`` is a fixed-capacity slot-keyed
+        state relation, ``rows`` the freshly computed per-slot values
+        (keyed identically), and ``mask`` an activity relation over the
+        same key grid with ``(1, 1)`` blocks — ``1.0`` rows take the new
+        value, ``0.0`` rows keep the old state unchanged, so inactive /
+        mid-eviction slots never drift inside a compiled step program.
+        Built from keywise ``scaleBy`` joins and a ``matAdd`` — no new
+        plan node, so every executor, the optimizer, and autodiff see
+        plain algebra.
+        """
+        rows = _as_expr(rows)
+        mask = _as_expr(mask)
+        if rows.key_shape != self.key_shape:
+            raise ExprTypeError(
+                f"slot_update: rows key grid {rows.key_shape} != state "
+                f"key grid {self.key_shape}")
+        if mask.key_shape != self.key_shape or mask.bound != (1, 1):
+            raise ExprTypeError(
+                f"slot_update: mask must be keyed {self.key_shape} with "
+                f"(1, 1) blocks, got {_describe_rtype(mask.info)}")
+        on = tuple(range(self.key_arity))
+        inv = const(1.0, mask.key_shape, mask.bound, mask.rtype.dtype) - mask
+        take = rows.join(mask, on=on, kernel="scaleBy")
+        keep = self.join(inv, on=on, kernel="scaleBy")
+        return take + keep
+
     # -- differentiation ---------------------------------------------------
     def grad(self, wrt, seed: "Expr" = None):
         """Cotangent expression(s) of ``self`` w.r.t. input(s) ``wrt``.

@@ -741,3 +741,154 @@ def concat(rel: TensorRelation, key_dim: int, array_dim: int) -> TensorRelation:
             mask = None
     rt = RelType(new_key_shape, tuple(nb), rel.data.dtype)
     return TensorRelation(x, rt, mask)
+
+
+# ==========================================================================
+# Serving helpers (repro.serve): batch-key packing + fixed-capacity slots
+# ==========================================================================
+#
+# A serving layer batches concurrent requests into ONE relation by adding a
+# new leading key dim (the batch key), padded to a bucket size so the
+# engine's structural compile cache stays hot across request counts.  The
+# decode state lives in a fixed-capacity relation whose leading key dim
+# indexes *slots*; admission/eviction are functional row writes.  All three
+# helpers require continuous (mask-free) relations — serving padding is
+# zero *rows*, not key holes, so the batched programs run on every staged
+# executor (which reject masked inputs).
+
+def _batched_rtype(rtype: RelType, bucket: int) -> RelType:
+    return RelType((bucket,) + tuple(rtype.key_shape), tuple(rtype.bound),
+                   rtype.dtype)
+
+
+def pack_rows(rows: Sequence, bucket: int, rtype: RelType
+              ) -> TensorRelation:
+    """Pack per-request values into one bucket-padded batched relation.
+
+    ``rows`` are :class:`TensorRelation`\\ s of type ``rtype`` (or raw
+    dense arrays of shape ``key_shape ++ bound``), one per request.  The
+    result gains a NEW leading key dim of size ``bucket`` — row ``i`` is
+    request ``i``'s value; rows ``len(rows)..bucket-1`` are zero padding.
+    Programs that never contract the batch key dim compute each row
+    independently, so the padding rows are inert (see
+    ``tests/test_serve.py`` for the masked-tail oracle).
+    """
+    if not 0 < len(rows) <= bucket:
+        raise ValueError(
+            f"pack_rows: {len(rows)} rows do not fit bucket {bucket}")
+    dense = tuple(rtype.key_shape) + tuple(rtype.bound)
+    datas = []
+    for i, r in enumerate(rows):
+        if isinstance(r, TensorRelation):
+            if r.rtype.key_shape != rtype.key_shape \
+                    or r.rtype.bound != rtype.bound:
+                raise ValueError(
+                    f"pack_rows: row {i} has type "
+                    f"f={r.rtype.key_shape} b={r.rtype.bound}, expected "
+                    f"f={rtype.key_shape} b={rtype.bound}")
+            if r.mask is not None:
+                raise ValueError(
+                    f"pack_rows: row {i} carries a mask; serving "
+                    f"relations must be continuous")
+            datas.append(r.data)
+        else:
+            arr = jnp.asarray(r, rtype.dtype)
+            if tuple(arr.shape) != dense:
+                raise ValueError(
+                    f"pack_rows: row {i} has dense shape "
+                    f"{tuple(arr.shape)}, expected {dense}")
+            datas.append(arr)
+    stacked = jnp.stack(datas, axis=0)
+    if len(rows) < bucket:
+        padding = jnp.zeros((bucket - len(rows),) + dense, rtype.dtype)
+        stacked = jnp.concatenate([stacked, padding], axis=0)
+    return TensorRelation(stacked, _batched_rtype(rtype, bucket))
+
+
+def unpack_rows(rel: TensorRelation, n: Optional[int] = None) -> list:
+    """Split a batched relation back into per-request relations.
+
+    Inverse of :func:`pack_rows` over the leading (batch) key dim:
+    returns the first ``n`` rows (default: all) as relations typed
+    without the batch key dim.
+    """
+    if rel.mask is not None:
+        raise ValueError("unpack_rows: batched relations are continuous")
+    if not rel.rtype.key_shape:
+        raise ValueError("unpack_rows: relation has no batch key dim")
+    bucket = rel.rtype.key_shape[0]
+    n = bucket if n is None else n
+    if not 0 <= n <= bucket:
+        raise ValueError(f"unpack_rows: n={n} outside bucket {bucket}")
+    row_rt = RelType(tuple(rel.rtype.key_shape[1:]),
+                     tuple(rel.rtype.bound), rel.rtype.dtype)
+    return [TensorRelation(rel.data[i], row_rt) for i in range(n)]
+
+
+def scatter_rows(rel: TensorRelation, slots: Sequence[int],
+                 rows: Sequence) -> TensorRelation:
+    """Functionally write per-slot values into a fixed-capacity relation.
+
+    ``rel`` is slot-keyed (leading key dim = capacity); ``rows[i]`` (a
+    relation or dense array typed like one slot) replaces slot
+    ``slots[i]``.  This is the serving layer's slot allocate/evict
+    primitive: admission writes freshly initialized state rows, eviction
+    zeroes freed ones — both out-of-place, so a compiled step program's
+    inputs are never mutated under it.
+    """
+    if len(slots) != len(rows):
+        raise ValueError(
+            f"scatter_rows: {len(slots)} slots vs {len(rows)} rows")
+    if rel.mask is not None:
+        raise ValueError("scatter_rows: slot relations are continuous")
+    if not rel.rtype.key_shape:
+        raise ValueError("scatter_rows: relation has no slot key dim")
+    if not slots:
+        return rel
+    capacity = rel.rtype.key_shape[0]
+    dense = tuple(rel.rtype.key_shape[1:]) + tuple(rel.rtype.bound)
+    datas = []
+    for i, r in enumerate(rows):
+        arr = r.data if isinstance(r, TensorRelation) else \
+            jnp.asarray(r, rel.rtype.dtype)
+        if tuple(arr.shape) != dense:
+            raise ValueError(
+                f"scatter_rows: row {i} has dense shape "
+                f"{tuple(arr.shape)}, expected {dense}")
+        datas.append(arr)
+    idx = []
+    for s in slots:
+        if not 0 <= s < capacity:
+            raise ValueError(
+                f"scatter_rows: slot {s} outside capacity {capacity}")
+        idx.append(int(s))
+    if len(set(idx)) != len(idx):
+        raise ValueError(f"scatter_rows: duplicate slots {idx}")
+    data = rel.data.at[jnp.asarray(idx)].set(jnp.stack(datas, axis=0))
+    return TensorRelation(data, rel.rtype)
+
+
+def zero_rows(rel: TensorRelation, slots: Sequence[int]) -> TensorRelation:
+    """Zero the given slots of a fixed-capacity relation (slot free).
+
+    Implemented as a full-capacity mask multiply rather than a gather /
+    scatter: the traced shapes depend only on the relation's type, never
+    on ``len(slots)``, so a serving loop freeing a different number of
+    slots each tick reuses ONE compiled XLA computation instead of
+    paying a recompile per distinct eviction count.
+    """
+    if rel.mask is not None:
+        raise ValueError("zero_rows: slot relations are continuous")
+    if not rel.rtype.key_shape:
+        raise ValueError("zero_rows: relation has no slot key dim")
+    if not slots:
+        return rel
+    capacity = rel.rtype.key_shape[0]
+    keep = np.ones((capacity,) + (1,) * (rel.data.ndim - 1),
+                   dtype=np.asarray(rel.data).dtype)
+    for s in slots:
+        if not 0 <= s < capacity:
+            raise ValueError(f"zero_rows: slot {s} out of range "
+                             f"[0, {capacity})")
+        keep[s] = 0.0
+    return TensorRelation(rel.data * jnp.asarray(keep), rel.rtype)

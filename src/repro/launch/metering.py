@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
@@ -301,3 +301,130 @@ def roofline_terms(meter_: Meter, chips: int) -> Dict[str, float]:
     dom = max((c, "compute"), (h, "memory"), (k, "collective"))[1]
     return {"compute_s": c, "memory_s": h, "collective_s": k,
             "dominant": dom, "step_s": max(c, h, k)}
+
+
+# ==========================================================================
+# Request-span metering (repro.serve): admission → completion wall clock
+# ==========================================================================
+#
+# The structural meters above price a (config × shape × plan) cell; a
+# serving benchmark needs the *other* kind of meter — measured per-request
+# spans, split into queue wait (submit → first scheduled step) and service
+# (first step → completion), so BENCH_serve.json can report latency
+# percentiles instead of one whole-process wall clock that hides queueing.
+
+@dataclasses.dataclass
+class RequestSpan:
+    """One request's lifecycle timestamps (``time.perf_counter`` seconds).
+
+    ``t_submit`` is stamped at queue admission, ``t_start`` when the
+    scheduler first packs the request into a batch (or allocates its
+    decode slot), ``t_complete`` when the result is handed back.
+    ``tokens`` counts produced output units (generated tokens for decode
+    servables, scored rows for stateless ones); ``artifacts`` records the
+    compile-cache ``artifact_id`` of every program dispatch that served
+    this request.
+    """
+
+    rid: int
+    kind: str = "request"
+    t_submit: float = 0.0
+    t_start: Optional[float] = None
+    t_complete: Optional[float] = None
+    tokens: int = 0
+    artifacts: list = dataclasses.field(default_factory=list)
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.t_start is None:
+            return None
+        return self.t_start - self.t_submit
+
+    @property
+    def service_s(self) -> Optional[float]:
+        if self.t_start is None or self.t_complete is None:
+            return None
+        return self.t_complete - self.t_start
+
+    @property
+    def total_s(self) -> Optional[float]:
+        if self.t_complete is None:
+            return None
+        return self.t_complete - self.t_submit
+
+
+def percentiles(values: Sequence[float],
+                qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` by linear interpolation."""
+    out: Dict[str, float] = {}
+    xs = sorted(float(v) for v in values)
+    for q in qs:
+        name = f"p{int(q) if float(q).is_integer() else q}"
+        if not xs:
+            out[name] = float("nan")
+            continue
+        pos = (len(xs) - 1) * (q / 100.0)
+        lo, hi = int(math.floor(pos)), int(math.ceil(pos))
+        out[name] = xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+    return out
+
+
+class SpanMeter:
+    """Collects :class:`RequestSpan`\\ s and summarizes them.
+
+    The serving layer owns exactly one meter per server; spans are opened
+    at ``submit`` time and closed by the scheduler, so queue wait and
+    compute are metered per request instead of folded into one
+    whole-process wall clock.
+    """
+
+    def __init__(self, clock=None) -> None:
+        import time
+        self._clock = clock or time.perf_counter
+        self.spans: list = []
+        self._next_rid = 0
+
+    def now(self) -> float:
+        return self._clock()
+
+    def open(self, kind: str = "request") -> RequestSpan:
+        span = RequestSpan(rid=self._next_rid, kind=kind,
+                           t_submit=self.now())
+        self._next_rid += 1
+        self.spans.append(span)
+        return span
+
+    def start(self, span: RequestSpan) -> None:
+        if span.t_start is None:
+            span.t_start = self.now()
+
+    def complete(self, span: RequestSpan, tokens: int = 0) -> None:
+        span.t_complete = self.now()
+        span.tokens += tokens
+
+    # -- reporting --------------------------------------------------------
+    def completed(self) -> list:
+        return [s for s in self.spans if s.t_complete is not None]
+
+    def summary(self) -> Dict[str, object]:
+        """Percentile latencies (ms) + aggregate throughput (tokens/s)."""
+        done = self.completed()
+        if not done:
+            return {"requests": 0}
+        t0 = min(s.t_submit for s in done)
+        t1 = max(s.t_complete for s in done)
+        window = max(t1 - t0, 1e-9)
+        tokens = sum(s.tokens for s in done)
+        ms = 1e3
+        return {
+            "requests": len(done),
+            "tokens": tokens,
+            "window_s": round(window, 6),
+            "tokens_per_s": round(tokens / window, 3),
+            "total_ms": {k: round(v * ms, 3) for k, v in percentiles(
+                [s.total_s for s in done]).items()},
+            "queue_wait_ms": {k: round(v * ms, 3) for k, v in percentiles(
+                [s.queue_wait_s for s in done]).items()},
+            "service_ms": {k: round(v * ms, 3) for k, v in percentiles(
+                [s.service_s for s in done]).items()},
+        }

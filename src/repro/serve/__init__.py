@@ -1,0 +1,28 @@
+"""TRA serving engine — continuous batching over compiled relational plans.
+
+Entry points:
+
+* :class:`~repro.serve.server.TraServer` — the server: admission queue,
+  continuous-batching scheduler, pinned compile-cache artifacts.
+* :class:`~repro.serve.servable.FFNNScorer` /
+  :class:`~repro.serve.servable.RecurrentLM` — the paper-native §5.3
+  scorer and the smoke step-decode LM it serves.
+* :mod:`repro.serve.loadgen` — Poisson / closed-loop drivers emitting
+  p50/p95/p99 latency and tokens/s.
+
+See ``docs/serving.md`` for the architecture.
+"""
+from repro.serve.loadgen import (LoadReport, closed_loop, lm_mix, open_loop,
+                                 poisson_arrivals, scorer_mix)
+from repro.serve.servable import (BatchServable, FFNNScorer, LmRequest,
+                                  RecurrentLM, Servable, StepServable,
+                                  pick_bucket)
+from repro.serve.server import RequestHandle, TraServer
+
+__all__ = [
+    "LoadReport", "closed_loop", "lm_mix", "open_loop",
+    "poisson_arrivals", "scorer_mix",
+    "BatchServable", "FFNNScorer", "LmRequest", "RecurrentLM",
+    "Servable", "StepServable", "pick_bucket",
+    "RequestHandle", "TraServer",
+]

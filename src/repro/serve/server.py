@@ -1,0 +1,336 @@
+"""TraServer — continuous batching over long-lived compiled TRA plans.
+
+The server owns an :class:`~repro.core.engine.Engine` plus one
+*servable* (:mod:`repro.serve.servable`) and turns the engine's
+structural compile cache into a serving artifact store:
+
+* at :meth:`warmup` every program the servable declares is compiled once
+  and **pinned** (`Engine.pin`), so the steady state dispatches against a
+  fixed artifact set — the acceptance invariant is *zero cache misses
+  after warmup* no matter how request shapes interleave;
+* requests enter through a thread-safe queue (:meth:`submit` returns a
+  :class:`RequestHandle` the caller blocks on) and the scheduler
+  (:meth:`step`) packs whatever is waiting into batched tensor relations:
+
+  - **batch servables** (stateless scoring): drain up to the largest
+    bucket, pad to the smallest fitting bucket with zero rows
+    (:func:`~repro.core.tra.pack_rows`), dispatch, unpack the first *k*
+    rows — the batch key dim is never contracted so padding is inert;
+  - **step servables** (LM decode): token-level continuous batching over
+    a fixed-capacity slot-keyed state relation.  Each tick admits
+    pending requests into free slots (functional row writes), feeds
+    every active slot one token (its next prompt token while prefilling,
+    its last sampled token while decoding), dispatches ONE compiled step
+    for all slots, rethreads ``state`` out→in by name exactly like
+    :class:`~repro.core.train.TraTrainer`, and evicts finished
+    sequences — zeroing their state rows — before the next tick, so a
+    new request can occupy the slot immediately.
+
+Per-request admission→completion spans are metered through
+:class:`~repro.launch.metering.SpanMeter`, splitting queue wait from
+service time and tagging each request with the artifact ids that served
+it.  Failures during a dispatch fail the *affected* handles (their
+``result()`` raises) and leave the server serving — pair with
+``Engine(degrade=True)`` to ride out compile/OOM faults mid-stream.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import CompiledExpr, Engine
+from repro.core.tra import TensorRelation, zero_rows
+from repro.launch.metering import RequestSpan, SpanMeter
+from repro.serve.servable import (BatchServable, LmRequest, Servable,
+                                  StepServable, pick_bucket)
+
+
+class RequestHandle:
+    """Caller-side future for one submitted request."""
+
+    def __init__(self, rid: int, payload: Any, span: RequestSpan):
+        self.rid = rid
+        self.payload = payload
+        self.span = span
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until served; raises the server-side error if it failed."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not done")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _complete(self, result: Any) -> None:
+        self._result = result
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+
+class _Seq:
+    """One in-flight decode sequence occupying a slot."""
+
+    def __init__(self, handle: RequestHandle, req: LmRequest):
+        self.handle = handle
+        self.req = req
+        self.pos = 0                      # prompt tokens consumed
+        self.generated: List[int] = []
+        self.logits: List[np.ndarray] = []
+
+    def next_input_token(self) -> int:
+        if self.pos < len(self.req.prompt):
+            return int(self.req.prompt[self.pos])     # prefill
+        return self.generated[-1]                     # decode
+
+    @property
+    def finished(self) -> bool:
+        return len(self.generated) >= self.req.max_new_tokens
+
+
+class TraServer:
+    """Serve one servable over one engine with continuous batching."""
+
+    def __init__(self, engine: Engine, servable: Servable, *,
+                 collect_logits: bool = False,
+                 meter: Optional[SpanMeter] = None):
+        self.engine = engine
+        self.servable = servable
+        self.collect_logits = collect_logits
+        self.meter = meter if meter is not None else SpanMeter()
+        self._queue: "queue.Queue[RequestHandle]" = queue.Queue()
+        self._pending = 0                 # submitted, not yet completed
+        self._pending_lock = threading.Lock()
+        self._step_lock = threading.RLock()
+        self._next_rid = 0
+        self.artifacts: Dict[str, CompiledExpr] = {}
+        self.dispatches: Dict[str, int] = {}
+        self.warmup_misses: Optional[int] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        if isinstance(servable, StepServable):
+            self._state: TensorRelation = servable.init_state()
+            self._slots: List[Optional[_Seq]] = [None] * servable.capacity
+        elif not isinstance(servable, BatchServable):
+            raise TypeError(f"unsupported servable {type(servable).__name__}")
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, payload: Any) -> RequestHandle:
+        """Enqueue one request; returns a handle to block on."""
+        if isinstance(self.servable, StepServable) and \
+                not isinstance(payload, LmRequest):
+            raise TypeError("step servables take LmRequest payloads")
+        with self._pending_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._pending += 1
+        handle = RequestHandle(rid, payload, self.meter.open("request"))
+        self._queue.put(handle)
+        return handle
+
+    # -- artifact lifecycle ------------------------------------------------
+    def warmup(self) -> Dict[str, CompiledExpr]:
+        """Compile and pin every program the servable declares.
+
+        After this returns, steady-state dispatch must be hit-only:
+        :attr:`cache_misses_since_warmup` staying 0 is the serving
+        acceptance invariant.
+        """
+        for prog in self.servable.programs():
+            compiled = self.engine.compile(prog)
+            self.engine.pin(compiled)
+            self.artifacts[compiled.artifact_id] = compiled
+        self.warmup_misses = self.engine.cache_misses
+        return dict(self.artifacts)
+
+    @property
+    def cache_misses_since_warmup(self) -> int:
+        if self.warmup_misses is None:
+            return self.engine.cache_misses
+        return self.engine.cache_misses - self.warmup_misses
+
+    # -- scheduling --------------------------------------------------------
+    def idle(self) -> bool:
+        with self._pending_lock:
+            return self._pending == 0
+
+    def step(self) -> int:
+        """One scheduler tick; returns how many requests made progress."""
+        with self._step_lock:
+            if isinstance(self.servable, BatchServable):
+                return self._step_batch()
+            return self._step_decode()
+
+    def run_until_idle(self, max_steps: int = 100_000) -> int:
+        """Drive ticks until every submitted request completed."""
+        steps = 0
+        while not self.idle():
+            if steps >= max_steps:
+                raise RuntimeError(f"not idle after {max_steps} steps")
+            self.step()
+            steps += 1
+        return steps
+
+    def serve(self, payloads: Sequence[Any]) -> List[Any]:
+        """Submit a batch of payloads, drive to idle, return results."""
+        handles = [self.submit(p) for p in payloads]
+        self.run_until_idle()
+        return [h.result(timeout=0) for h in handles]
+
+    # -- background loop ---------------------------------------------------
+    def start(self, tick_wait_s: float = 0.001) -> None:
+        """Run the scheduler on a background thread (loadgen mode)."""
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.is_set():
+                if self.step() == 0:
+                    self._stop.wait(tick_wait_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="tra-server")
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    # -- internals ---------------------------------------------------------
+    def _finish(self, handle: RequestHandle, result: Any,
+                tokens: int) -> None:
+        handle._complete(result)
+        self.meter.complete(handle.span, tokens=tokens)
+        with self._pending_lock:
+            self._pending -= 1
+
+    def _fail(self, handle: RequestHandle, err: BaseException) -> None:
+        handle._fail(err)
+        self.meter.complete(handle.span, tokens=0)
+        with self._pending_lock:
+            self._pending -= 1
+
+    def _record_dispatch(self, compiled: CompiledExpr,
+                         spans: Sequence[RequestSpan]) -> None:
+        aid = compiled.artifact_id or "unkeyed"
+        self.dispatches[aid] = self.dispatches.get(aid, 0) + 1
+        for sp in spans:
+            if not sp.artifacts or sp.artifacts[-1] != aid:
+                sp.artifacts.append(aid)
+
+    def _step_batch(self) -> int:
+        sv: BatchServable = self.servable  # type: ignore[assignment]
+        batch: List[RequestHandle] = []
+        while len(batch) < max(sv.buckets):
+            try:
+                batch.append(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        if not batch:
+            return 0
+        for h in batch:
+            self.meter.start(h.span)
+        bucket = pick_bucket(len(batch), sv.buckets)
+        try:
+            compiled = self.engine.compile(sv.program(bucket))
+            self._record_dispatch(compiled, [h.span for h in batch])
+            outs = compiled.run(**sv.pack([h.payload for h in batch],
+                                          bucket), **sv.weights())
+            results = sv.unpack(outs, len(batch))
+        except Exception as err:  # fail the batch, keep serving
+            for h in batch:
+                self._fail(h, err)
+            return len(batch)
+        for h, res in zip(batch, results):
+            self._finish(h, res, tokens=1)
+        return len(batch)
+
+    def _step_decode(self) -> int:
+        sv: StepServable = self.servable  # type: ignore[assignment]
+        # 1. admit pending requests into the lowest free slots
+        for i in range(sv.capacity):
+            if self._slots[i] is not None:
+                continue
+            try:
+                handle = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            self.meter.start(handle.span)
+            self._slots[i] = _Seq(handle, handle.payload)
+        live = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        if not live:
+            return 0
+        # 2. one token per active slot: prompt token while prefilling,
+        #    last sampled token while decoding
+        tokens: List[Optional[int]] = [None] * sv.capacity
+        for i, seq in live:
+            tokens[i] = seq.next_input_token()
+        # 3. ONE batched step for every slot; state threads out -> in
+        try:
+            compiled = self.engine.compile(sv.step_program())
+            self._record_dispatch(compiled, [s.handle.span for _, s in live])
+            outs = compiled.run(**sv.step_inputs(tokens), **sv.weights(),
+                                **{"lm.state": self._state})
+        except Exception as err:  # fail every in-flight seq, free slots
+            for i, seq in live:
+                self._fail(seq.handle, err)
+                self._slots[i] = None
+            self._state = sv.init_state()
+            return len(live)
+        self._state = outs["state"]
+        logits = np.asarray(outs["logits"].data)
+        # 4. advance sequences; sample once prefill is done
+        evicted: List[int] = []
+        for i, seq in live:
+            seq.pos += 1
+            if seq.pos >= len(seq.req.prompt):
+                row = logits[i].reshape(-1)
+                seq.generated.append(sv.next_token(row))
+                if self.collect_logits:
+                    seq.logits.append(row.copy())
+            if seq.finished:
+                result = {"tokens": list(seq.generated)}
+                if self.collect_logits:
+                    result["logits"] = list(seq.logits)
+                self._finish(seq.handle, result,
+                             tokens=len(seq.generated))
+                self._slots[i] = None
+                evicted.append(i)
+        # 5. zero evicted state rows so reused slots start clean
+        if evicted:
+            self._state = zero_rows(self._state, evicted)
+        return len(live)
+
+    # -- reporting ---------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Serving report: artifacts, dispatch counts, span summary."""
+        cache = [{
+            "artifact_id": e.artifact_id,
+            "executor": e.executor,
+            "hits": e.hits,
+            "pinned": e.pinned,
+            "degraded": e.degraded,
+            "dispatches": self.dispatches.get(e.artifact_id, 0),
+        } for e in self.engine.cache_info()]
+        return {
+            "servable": self.servable.name,
+            "executor": self.engine.executor,
+            "cache_misses_since_warmup": self.cache_misses_since_warmup,
+            "artifacts": cache,
+            **self.meter.summary(),
+        }

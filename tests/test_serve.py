@@ -1,0 +1,385 @@
+"""Serving subsystem tests: TraServer, servables, batching helpers.
+
+The load-bearing guarantees:
+
+* continuous batching is *invisible* — batched-step outputs match the
+  per-request dense oracle at 1e-5 no matter how requests interleave;
+* bucket padding is inert — zero tail rows never leak into real rows;
+* slot lifecycle is sound — alloc/evict/reuse under randomized arrival
+  and finish orders keeps free rows zero and capacity respected;
+* the compile cache is cold after warmup — steady-state dispatch never
+  misses, on the reference and the jit executor alike.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Engine, ExprTypeError
+from repro.core import expr as E
+from repro.core.tra import (RelType, TensorRelation, pack_rows,
+                            scatter_rows, unpack_rows, zero_rows)
+from repro.launch.metering import RequestSpan, SpanMeter, percentiles
+from repro.serve import (FFNNScorer, LmRequest, RecurrentLM, TraServer,
+                         closed_loop, lm_mix, open_loop, poisson_arrivals,
+                         pick_bucket, scorer_mix)
+
+EXECUTORS = ("reference", "jit")
+
+
+def small_lm(capacity=4):
+    return RecurrentLM(d_model=16, vocab_size=32, capacity=capacity)
+
+
+# =========================================================================
+# batching helpers (core/tra.py)
+# =========================================================================
+
+class TestRowHelpers:
+    def rtype(self):
+        return RelType((2,), (1, 3))
+
+    def rel(self, fill):
+        return TensorRelation(jnp.full((2, 1, 3), float(fill)), self.rtype())
+
+    def test_pack_pads_to_bucket(self):
+        packed = pack_rows([self.rel(1), self.rel(2)], 4, self.rtype())
+        assert packed.rtype.key_shape == (4, 2)
+        np.testing.assert_allclose(np.asarray(packed.data)[2:], 0.0)
+        np.testing.assert_allclose(np.asarray(packed.data)[1], 2.0)
+
+    def test_pack_unpack_roundtrip(self):
+        rels = [self.rel(i) for i in range(3)]
+        packed = pack_rows(rels, 4, self.rtype())
+        back = unpack_rows(packed, 3)
+        assert len(back) == 3
+        for orig, got in zip(rels, back):
+            assert got.rtype == orig.rtype
+            np.testing.assert_allclose(np.asarray(got.data),
+                                       np.asarray(orig.data))
+
+    def test_pack_rejects_overflow_and_mismatch(self):
+        with pytest.raises(ValueError):
+            pack_rows([self.rel(1)] * 5, 4, self.rtype())
+        with pytest.raises(ValueError):
+            pack_rows([TensorRelation(jnp.zeros((3, 1, 3)),
+                                      RelType((3,), (1, 3)))],
+                      4, self.rtype())
+
+    def test_scatter_and_zero_rows(self):
+        base = pack_rows([self.rel(1)] * 4, 4, self.rtype())
+        out = scatter_rows(base, [1, 3], [self.rel(7), self.rel(9)])
+        data = np.asarray(out.data)
+        np.testing.assert_allclose(data[1], 7.0)
+        np.testing.assert_allclose(data[3], 9.0)
+        np.testing.assert_allclose(data[0], 1.0)   # untouched
+        zeroed = zero_rows(out, [3])
+        np.testing.assert_allclose(np.asarray(zeroed.data)[3], 0.0)
+        np.testing.assert_allclose(np.asarray(zeroed.data)[1], 7.0)
+
+    def test_scatter_rejects_bad_slots(self):
+        base = pack_rows([self.rel(1)], 2, self.rtype())
+        with pytest.raises(ValueError):
+            scatter_rows(base, [2], [self.rel(0)])
+        with pytest.raises(ValueError):
+            scatter_rows(base, [0, 0], [self.rel(0), self.rel(1)])
+
+
+class TestSlotUpdate:
+    def test_masked_update_selects_rows(self):
+        eng = Engine(executor="reference")
+        state = E.input("S", (3, 1), (1, 4))
+        rows = E.input("R", (3, 1), (1, 4))
+        mask = E.input("M", (3, 1), (1, 1))
+        prog = state.slot_update(rows, mask)
+        s = jnp.arange(12, dtype=jnp.float32).reshape(3, 1, 1, 4)
+        r = -jnp.ones((3, 1, 1, 4))
+        m = jnp.asarray([1.0, 0.0, 1.0]).reshape(3, 1, 1, 1)
+        out = eng.run(prog, S=s, R=r, M=m)
+        data = np.asarray(out.data)
+        np.testing.assert_allclose(data[0], -1.0)
+        np.testing.assert_allclose(data[1], np.asarray(s)[1])
+        np.testing.assert_allclose(data[2], -1.0)
+
+    def test_type_errors(self):
+        state = E.input("S", (3, 1), (1, 4))
+        with pytest.raises(ExprTypeError):
+            state.slot_update(E.input("R", (2, 1), (1, 4)),
+                              E.input("M", (3, 1), (1, 1)))
+        with pytest.raises(ExprTypeError):
+            state.slot_update(E.input("R", (3, 1), (1, 4)),
+                              E.input("M", (3, 1), (1, 4)))
+
+
+# =========================================================================
+# engine cache introspection (satellite b)
+# =========================================================================
+
+class TestCacheInfo:
+    def test_entries_hits_and_artifact_ids(self):
+        eng = Engine(executor="jit")
+        sc = FFNNScorer()
+        c1 = eng.compile(sc.program(2))
+        c2 = eng.compile(sc.program(2))        # hit
+        assert c1 is c2
+        eng.compile(sc.program(4))
+        info = eng.cache_info()
+        assert len(info) == 2
+        assert info[0].hits == 1 and info[1].hits == 0
+        assert info[0].executor == "jit"
+        assert info[0].artifact_id.startswith("jit:")
+        assert not info[0].degraded
+        assert info[0].root_names == ("scores",)
+
+    def test_pin_survives_clear(self):
+        eng = Engine(executor="reference")
+        sc = FFNNScorer()
+        pinned = eng.compile(sc.program(1))
+        eng.pin(pinned)
+        eng.compile(sc.program(2))
+        assert eng.cache_clear() == 1          # unpinned entry evicted
+        info = eng.cache_info()
+        assert len(info) == 1 and info[0].pinned
+        assert eng.cache_clear(pinned=True) == 1
+        assert eng.cache_info() == ()
+
+    def test_pin_unknown_artifact_raises(self):
+        eng = Engine(executor="reference")
+        other = Engine(executor="reference")
+        sc = FFNNScorer()
+        compiled = other.compile(sc.program(1))
+        with pytest.raises(ValueError):
+            eng.pin(compiled)
+
+
+# =========================================================================
+# batched serving vs per-request oracle (tentpole acceptance)
+# =========================================================================
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+class TestScorerServing:
+    def test_batched_matches_oracle(self, executor):
+        eng = Engine(executor=executor)
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        rng = np.random.default_rng(0)
+        payloads = scorer_mix(sc, rng, 11)     # 8 + 3: two buckets
+        results = server.serve(payloads)
+        for p, r in zip(payloads, results):
+            np.testing.assert_allclose(r, sc.oracle(p), atol=1e-5)
+
+    def test_zero_cache_misses_after_warmup(self, executor):
+        eng = Engine(executor=executor)
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        rng = np.random.default_rng(1)
+        for n in (1, 3, 8, 2, 5, 8, 1):        # every bucket, re-visited
+            server.serve(scorer_mix(sc, rng, n))
+        assert server.cache_misses_since_warmup == 0
+        assert all(e.pinned for e in eng.cache_info())
+
+    def test_bucket_padding_tail_is_inert(self, executor):
+        """A request's scores do not depend on how much padding rides
+        along: serve the same payload alone (bucket 1) and as the head
+        of a 3-wide batch (bucket 4, one zero tail row)."""
+        eng = Engine(executor=executor)
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        rng = np.random.default_rng(2)
+        p = sc.random_payload(rng)
+        solo = server.serve([p])[0]
+        others = scorer_mix(sc, rng, 2)
+        batched = server.serve([p] + others)[0]
+        np.testing.assert_allclose(batched, solo, atol=1e-5)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+class TestLmServing:
+    def test_continuous_batching_matches_oracle(self, executor):
+        eng = Engine(executor=executor)
+        lm = small_lm(capacity=4)
+        server = TraServer(eng, lm, collect_logits=True)
+        server.warmup()
+        rng = np.random.default_rng(3)
+        reqs = lm_mix(lm, rng, 9, prompt_len=(1, 4), new_tokens=(1, 6))
+        results = server.serve(reqs)
+        for req, res in zip(reqs, results):
+            toks, logs = lm.oracle_decode(req.prompt, req.max_new_tokens)
+            assert res["tokens"] == toks
+            for got, want in zip(res["logits"], logs):
+                np.testing.assert_allclose(got, want, atol=1e-5)
+        assert server.cache_misses_since_warmup == 0
+
+
+class TestSlotLifecycle:
+    def test_randomized_arrival_and_finish_orders(self):
+        """Randomized admission with heterogeneous lifetimes: capacity
+        is never exceeded, freed slots are reused, free state rows stay
+        zero, and every response still matches its oracle."""
+        eng = Engine(executor="jit")
+        lm = small_lm(capacity=3)
+        server = TraServer(eng, lm)
+        server.warmup()
+        rng = np.random.default_rng(4)
+        reqs = lm_mix(lm, rng, 10, prompt_len=(1, 3), new_tokens=(1, 5))
+        handles = []
+        occupied_rids = set()
+        it = iter(reqs)
+        pending = next(it, None)
+        while pending is not None or not server.idle():
+            # trickle submissions in at random ticks
+            while pending is not None and rng.random() < 0.6:
+                handles.append(server.submit(pending))
+                pending = next(it, None)
+            server.step()
+            live = [s for s in server._slots if s is not None]
+            assert len(live) <= lm.capacity
+            occupied_rids.update(s.handle.rid for s in live)
+            state = np.asarray(server._state.data)
+            for i, s in enumerate(server._slots):
+                if s is None:                  # freed/never-used row: zero
+                    np.testing.assert_allclose(state[i], 0.0)
+        assert len(handles) == 10
+        assert occupied_rids == {h.rid for h in handles}
+        for h in handles:
+            toks, _ = lm.oracle_decode(h.payload.prompt,
+                                       h.payload.max_new_tokens)
+            assert h.result(timeout=0)["tokens"] == toks
+
+    def test_slot_reuse_after_eviction(self):
+        eng = Engine(executor="reference")
+        lm = small_lm(capacity=1)              # forced serialization
+        server = TraServer(eng, lm)
+        server.warmup()
+        reqs = [LmRequest(prompt=[i + 1], max_new_tokens=2)
+                for i in range(3)]
+        results = server.serve(reqs)
+        for req, res in zip(reqs, results):
+            toks, _ = lm.oracle_decode(req.prompt, req.max_new_tokens)
+            assert res["tokens"] == toks
+
+
+class TestServerPlumbing:
+    def test_step_servable_rejects_raw_payloads(self):
+        server = TraServer(Engine(executor="reference"), small_lm())
+        with pytest.raises(TypeError):
+            server.submit([1, 2, 3])
+
+    def test_failed_dispatch_fails_handles_not_server(self):
+        eng = Engine(executor="reference")
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        bad = server.submit(np.zeros(3, np.float32))   # wrong feature dim
+        server.step()
+        with pytest.raises(ValueError):
+            bad.result(timeout=0)
+        good = sc.random_payload(np.random.default_rng(0))
+        ok = server.serve([good])              # server keeps serving
+        np.testing.assert_allclose(ok[0], sc.oracle(good), atol=1e-5)
+        assert server.idle()
+
+    def test_stats_report_artifacts_and_dispatches(self):
+        eng = Engine(executor="jit")
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        rng = np.random.default_rng(5)
+        server.serve(scorer_mix(sc, rng, 3))
+        stats = server.stats()
+        assert stats["servable"] == "ffnn-scorer"
+        assert stats["cache_misses_since_warmup"] == 0
+        assert sum(a["dispatches"] for a in stats["artifacts"]) == 1
+        assert stats["requests"] == 3
+
+    def test_background_thread_serving(self):
+        eng = Engine(executor="reference")
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        server.start()
+        try:
+            rng = np.random.default_rng(6)
+            payloads = scorer_mix(sc, rng, 5)
+            handles = [server.submit(p) for p in payloads]
+            for p, h in zip(payloads, handles):
+                np.testing.assert_allclose(h.result(timeout=30.0),
+                                           sc.oracle(p), atol=1e-5)
+        finally:
+            server.stop()
+
+
+# =========================================================================
+# metering (satellite f) and loadgen
+# =========================================================================
+
+class TestMetering:
+    def test_percentiles_interpolation(self):
+        ps = percentiles(list(range(1, 101)))
+        assert ps["p50"] == pytest.approx(50.5)
+        assert ps["p99"] == pytest.approx(99.01)
+        assert np.isnan(percentiles([])["p50"])
+
+    def test_span_queue_wait_vs_service(self):
+        t = [0.0]
+        meter = SpanMeter(clock=lambda: t[0])
+        span = meter.open("request")           # submit at t=0
+        t[0] = 2.0
+        meter.start(span)                      # admitted at t=2
+        t[0] = 5.0
+        meter.complete(span, tokens=6)
+        assert span.queue_wait_s == pytest.approx(2.0)
+        assert span.service_s == pytest.approx(3.0)
+        assert span.total_s == pytest.approx(5.0)
+        s = meter.summary()
+        assert s["requests"] == 1 and s["tokens"] == 6
+        assert s["queue_wait_ms"]["p50"] == pytest.approx(2000.0)
+        assert s["service_ms"]["p50"] == pytest.approx(3000.0)
+
+    def test_start_idempotent(self):
+        t = [0.0]
+        meter = SpanMeter(clock=lambda: t[0])
+        span = meter.open("request")
+        t[0] = 1.0
+        meter.start(span)
+        t[0] = 9.0
+        meter.start(span)                      # later start must not move it
+        assert span.t_start == pytest.approx(1.0)
+
+
+class TestLoadgen:
+    def test_poisson_arrivals_monotone_and_rate(self):
+        rng = np.random.default_rng(7)
+        arr = poisson_arrivals(rng, 2000, rate_per_s=100.0)
+        assert all(b >= a for a, b in zip(arr, arr[1:]))
+        assert arr[-1] == pytest.approx(20.0, rel=0.2)
+
+    def test_open_loop_serves_all(self):
+        eng = Engine(executor="jit")
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        rng = np.random.default_rng(8)
+        payloads = scorer_mix(sc, rng, 16)
+        rep = open_loop(server, payloads,
+                        poisson_arrivals(rng, 16, rate_per_s=4000.0))
+        assert rep.requests == 16 and rep.errors == 0
+        assert rep.summary["requests"] == 16
+        assert server.cache_misses_since_warmup == 0
+
+    def test_closed_loop_counts_errors(self):
+        eng = Engine(executor="reference")
+        sc = FFNNScorer()
+        server = TraServer(eng, sc)
+        server.warmup()
+        good = sc.random_payload(np.random.default_rng(9))
+        bad = np.zeros(2, np.float32)
+        rep = closed_loop(server,
+                          lambda i: bad if i == 1 else good,
+                          n_requests=4, concurrency=2)
+        assert rep.requests == 4
+        assert rep.errors >= 1
+        assert server.idle()
