@@ -221,3 +221,102 @@ def comm_cost(root: IANode, axis_sizes: Dict[str, int],
     """The plan-selection metric: floats moved (wire-accurate by default;
     pass accounting="paper" for the paper's verbatim §4.3 rules)."""
     return cost_plan(root, axis_sizes, accounting).comm_floats
+
+
+# ==========================================================================
+# Compile-time liveness: peak device bytes of a plan evaluation
+# ==========================================================================
+
+def _itemsize(rtype) -> int:
+    import numpy as np
+    try:
+        return np.dtype(rtype.dtype).itemsize
+    except TypeError:
+        return 4
+
+
+def plan_peak_bytes(roots, *, fuse: bool = True) -> int:
+    """Estimated peak live device bytes to evaluate ``roots``.
+
+    Walks the shared DAG in evaluation (postorder) order with exact
+    reference counts: a node's bytes stay live until its last consumer has
+    evaluated; root outputs are never released.  Relations are priced at
+    their *dense* allocation (``nfloats × itemsize`` — masks do not shrink
+    the array XLA materializes).  With ``fuse=True`` (the Engine default)
+    a ``TraAgg(TraJoin)`` pair that :func:`repro.core.tra.can_fuse`
+    accepts — and any physical :class:`FusedJoinAgg` — never materializes
+    the join grid; the streamed contraction instead holds the output
+    accumulator plus one merged partial, charged as ``2 × out_bytes``.
+
+    This is the estimator behind ``Engine(memory_budget=...)``: plans
+    whose peak exceeds the budget are routed through the host relation
+    store (:mod:`repro.store`) instead of evaluated resident.
+    """
+    from repro.core.plan import TraAgg, TraJoin, as_node, children
+    from repro.core.tra import can_fuse
+    if not isinstance(roots, (tuple, list)):
+        roots = (roots,)
+    roots = tuple(as_node(r) for r in roots)
+    cache: Dict[int, TypeInfo] = {}
+    for r in roots:
+        infer(r, cache=cache)
+    order, seen = [], set()
+    for r in roots:
+        for n in postorder(r):
+            if id(n) not in seen:
+                seen.add(id(n))
+                order.append(n)
+
+    consumers: Dict[int, int] = {}
+    for n in order:
+        for c in children(n):
+            consumers[id(c)] = consumers.get(id(c), 0) + 1
+
+    fused = set()
+    for n in order:
+        if isinstance(n, FusedJoinAgg):
+            continue                    # inherently streamed already
+        if (fuse and isinstance(n, TraAgg) and isinstance(n.child, TraJoin)
+                and consumers.get(id(n.child), 0) == 1
+                and can_fuse(n.child.kernel, n.kernel)):
+            fused.add(id(n.child))
+
+    def nbytes(n) -> int:
+        ti = cache[id(n)]
+        return ti.rtype.nfloats * _itemsize(ti.rtype)
+
+    def eff_children(n):
+        out = []
+        for c in children(n):
+            if id(c) in fused:
+                out.extend(children(c))
+            else:
+                out.append(c)
+        return out
+
+    refs: Dict[int, int] = {}
+    for n in order:
+        if id(n) in fused:
+            continue
+        for c in eff_children(n):
+            refs[id(c)] = refs.get(id(c), 0) + 1
+    for r in roots:
+        refs[id(r)] = refs.get(id(r), 0) + 1    # outputs never release
+
+    live: Dict[int, int] = {}
+    cur = peak = 0
+    for n in order:
+        if id(n) in fused:
+            continue
+        b = nbytes(n)
+        streamed_contraction = isinstance(n, FusedJoinAgg) or (
+            isinstance(n, TraAgg) and id(n.child) in fused)
+        tmp = b if streamed_contraction else 0
+        peak = max(peak, cur + b + tmp)
+        cur += b
+        live[id(n)] = b
+        for c in eff_children(n):
+            refs[id(c)] -= 1
+            if refs[id(c)] == 0:
+                cur -= live.pop(id(c), 0)
+    return max(peak, cur)

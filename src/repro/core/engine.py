@@ -70,6 +70,20 @@ _EXECUTOR_FALLBACKS = {
 DEFAULT_OOM_LADDER_START = 64
 
 
+def _validate_chunk(chunk) -> None:
+    """``chunk`` is ``None``, ``"auto"`` or a positive int."""
+    if chunk is None:
+        return
+    if isinstance(chunk, str):
+        if chunk != "auto":
+            raise ValueError(
+                f"chunk must be a positive int, None or \"auto\"; "
+                f"got {chunk!r}")
+        return
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+
+
 # ==========================================================================
 # Structural plan signatures (compile-cache keys)
 # ==========================================================================
@@ -195,6 +209,11 @@ class CompiledExpr:
     # engine at compile time; serving layers report which artifact served
     # a request by this id (see Engine.cache_info)
     artifact_id: Optional[str] = None
+    # out-of-core streamed artifacts (Engine(memory_budget=...)): inputs
+    # may be host-resident HostRelations, and validation defers to the
+    # per-chunk inner compiles
+    streamed: bool = False
+    stream_stats: Optional[object] = None   # metering.StreamStats
 
     @property
     def plan(self):
@@ -221,13 +240,14 @@ class CompiledExpr:
         if unknown:
             raise ValueError(f"unexpected inputs: {unknown}; "
                              f"expected {sorted(self.input_rtypes)}")
-        env = {name: _coerce(name, val, self.input_rtypes[name])
+        env = {name: _coerce(name, val, self.input_rtypes[name],
+                             keep_host=self.streamed)
                for name, val in inputs.items()}
         missing = [n for n in self.input_rtypes if n not in env]
         if missing:
             raise ValueError(f"missing inputs: {missing}; "
                              f"expected {sorted(self.input_rtypes)}")
-        if self.executor != "reference":
+        if self.executor != "reference" and not self.streamed:
             # staged executors rebuild relations from raw arrays inside
             # the compiled artifact, so an input-side static mask would be
             # silently dropped — only the eager reference walk threads
@@ -276,13 +296,26 @@ class CacheEntry:
     root_names: Optional[Tuple[str, ...]]
     signature: Tuple
     compiled: CompiledExpr
+    # per-artifact out-of-core streaming counters
+    # (repro.launch.metering.StreamStats) for artifacts compiled through
+    # the host relation store; None for resident artifacts
+    stream_stats: Optional[object] = None
 
 
-def _coerce(name: str, value, rtype) -> TensorRelation:
+def _coerce(name: str, value, rtype, keep_host: bool = False):
     if isinstance(value, TensorRelation):
         return value
     if rtype is None:
         raise ValueError(f"unexpected input {name!r}")
+    # host-resident handles from the relation store (duck-typed so the
+    # core layer does not import repro.store): streamed artifacts keep
+    # them host-side and slice per chunk; resident artifacts materialize
+    if hasattr(value, "to_relation") and hasattr(value, "split_dim"):
+        if value.rtype != rtype:
+            raise ValueError(
+                f"input {name!r}: host relation type {value.rtype} != "
+                f"declared {rtype}")
+        return value if keep_host else value.to_relation()
     expect = tuple(rtype.key_shape) + tuple(rtype.bound)
     if tuple(value.shape) != expect:
         raise ValueError(
@@ -336,10 +369,28 @@ class Engine:
         (1-site ``("sites",)`` otherwise).
     chunk:
         Grid slices materialized per step of the chunked fused-Σ∘⋈
-        streaming reduction (the non-contraction kernel pairs).  ``None``
-        (default) derives a per-shape value from
-        :data:`repro.core.tra.DEFAULT_CHUNK_BYTES`; ``compile(...,
-        chunk=...)`` overrides per expression.
+        streaming reduction (the non-contraction kernel pairs).
+        ``"auto"`` (default) autotunes a per-shape value from the device
+        memory budget (``memory_budget`` when given, else the device's
+        calibrated ``memory_stats`` limit, else the static
+        :data:`repro.core.tra.DEFAULT_CHUNK_BYTES` — see
+        :mod:`repro.store.autotune`); ``None`` keeps the static
+        bytes-based default; an int pins it.  ``compile(..., chunk=...)``
+        overrides per expression.
+    memory_budget:
+        Optional device live-bytes budget enabling the spill-aware
+        out-of-core mode: at compile time the engine estimates each
+        plan's peak live bytes (:func:`repro.core.cost.plan_peak_bytes`)
+        and routes over-budget single-root logical plans through the
+        host relation store (:mod:`repro.store`) — operands stream in
+        key-range chunks with double-buffered H2D copies instead of
+        materializing resident.  Plans under budget run exactly as
+        without it.
+    store:
+        Optional :class:`repro.store.RelationStore` backing
+        ``HostRelation`` inputs/outputs (one is created lazily when
+        needed).  ``engine.store.put(name, rel)`` turns any relation
+        into a host-resident handle accepted by ``run``.
     fault_injector:
         Optional :class:`repro.core.faults.FaultInjector` threaded into
         every executor — simulated site failures, device OOM, stragglers
@@ -372,15 +423,19 @@ class Engine:
                  accounting: str = "wire",
                  try_logical_rewrites: bool = True,
                  fuse: bool = True,
-                 chunk: Optional[int] = None,
+                 chunk: Union[int, str, None] = "auto",
+                 memory_budget: Optional[int] = None,
+                 store=None,
                  fault_injector=None,
                  check_numerics=False,
                  degrade: bool = False):
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; choose from {EXECUTORS}")
-        if chunk is not None and chunk < 1:
-            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        _validate_chunk(chunk)
+        if memory_budget is not None and memory_budget < 1:
+            raise ValueError(
+                f"memory_budget must be >= 1 byte, got {memory_budget}")
         self.mesh = mesh
         self.fault_injector = fault_injector
         self.check_numerics = check_numerics
@@ -388,9 +443,13 @@ class Engine:
         self.executor = executor
         self.optimize = optimize
         self.fuse = fuse
-        # grid slices per streamed fused-reduction step; None derives a
-        # bytes-based default from tra.DEFAULT_CHUNK_BYTES
+        # grid slices per streamed fused-reduction step; "auto" autotunes
+        # from the device budget, None derives the static bytes-based
+        # default from tra.DEFAULT_CHUNK_BYTES
         self.chunk = chunk
+        # out-of-core mode: device live-bytes budget + host relation store
+        self.memory_budget = memory_budget
+        self._store_obj = store
         self.accounting = accounting
         self.try_logical_rewrites = try_logical_rewrites
         self.input_placements = dict(input_placements or {})
@@ -406,6 +465,15 @@ class Engine:
         self._cache: Dict[Tuple, _CacheSlot] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+
+    # -- host relation store (out-of-core tier) ---------------------------
+    @property
+    def store(self):
+        """The engine's :class:`repro.store.RelationStore` (lazy)."""
+        if self._store_obj is None:
+            from repro.store import RelationStore
+            self._store_obj = RelationStore()
+        return self._store_obj
 
     # -- compile-cache introspection --------------------------------------
     def cache_info(self) -> Tuple[CacheEntry, ...]:
@@ -430,7 +498,8 @@ class Engine:
                 degraded=key[-1] == "degraded",
                 root_names=slot.compiled.root_names,
                 signature=key,
-                compiled=slot.compiled))
+                compiled=slot.compiled,
+                stream_stats=getattr(slot.compiled, "stream_stats", None)))
         return tuple(out)
 
     def pin(self, compiled: CompiledExpr) -> CompiledExpr:
@@ -476,24 +545,54 @@ class Engine:
     def run(self, expr, **inputs) -> Union[TensorRelation, Tuple]:
         """Compile (with caching) and execute in one call.
 
+        With ``memory_budget`` set (or ``HostRelation`` inputs) a
+        single-root logical expression is first considered for the
+        out-of-core path: when its estimated peak live bytes exceed the
+        budget it executes through the host relation store, streaming
+        key-range chunks with double-buffered transfers
+        (:class:`repro.store.StreamExecutor`); under-budget plans run
+        resident exactly as without the budget.
+
         With ``degrade=True`` a device OOM raised out of the fused
         contraction (injected :class:`~repro.core.faults.DeviceOOM` or a
-        real ``RESOURCE_EXHAUSTED``) retries the expression *streamed*: the
-        fused Σ∘⋈ is forced onto the chunked ``fori_loop`` fallback with a
-        halving chunk ladder, trading arithmetic intensity for bounded
+        real ``RESOURCE_EXHAUSTED``) walks a two-rung recovery ladder:
+        first the whole expression is retried *streamed through the host
+        relation store* (out-of-core key-range chunking, which bounds
+        peak operand bytes); if that cannot apply or still OOMs, the
+        fused Σ∘⋈ is forced onto the chunked ``fori_loop`` fallback with
+        a halving chunk ladder, trading arithmetic intensity for bounded
         peak memory until a rung fits.
         """
         from repro.core.guards import is_oom_error
         try:
-            return self.compile(expr).run(**inputs)
+            return self._dispatch(expr, inputs)
         except Exception as err:
             if not (self.degrade and is_oom_error(err)):
                 raise
-        start = self.chunk or DEFAULT_OOM_LADDER_START
+        # rung 1: out-of-core streaming through the relation store —
+        # bounds peak device bytes without shrinking the fused chunk
+        from repro.store.stream import NotStreamable
+        try:
+            warnings.warn(
+                "device OOM in fused contraction; retrying streamed "
+                "through the host relation store (out-of-core key-range "
+                "chunks) before the last-resort chunked fallback",
+                RuntimeWarning, stacklevel=2)
+            return self._compile_streamed(expr, force=True).run(**inputs)
+        except NotStreamable:
+            pass
+        except Exception as err:
+            if not is_oom_error(err):
+                raise
+        # rung 2: force the fused Σ∘⋈ onto its chunked streaming fallback
+        # with a halving chunk ladder
+        start = self.chunk if isinstance(self.chunk, int) \
+            else DEFAULT_OOM_LADDER_START
         warnings.warn(
-            f"device OOM in fused contraction; degrading to the streamed "
-            f"chunked fallback (halving chunk ladder from {start}) — "
-            f"consider a smaller Engine(chunk=...) or more device memory",
+            f"device OOM persists; degrading to the streamed chunked "
+            f"fallback (halving chunk ladder from {start}) — consider a "
+            f"smaller Engine(chunk=...), Engine(memory_budget=...), or "
+            f"more device memory",
             RuntimeWarning, stacklevel=2)
         c = start
         while True:
@@ -504,6 +603,84 @@ class Engine:
                 if not (is_oom_error(err) and c > 1):
                     raise
                 c = max(1, c // 2)
+
+    def _dispatch(self, expr, inputs):
+        """Route a ``run`` through the out-of-core path when applicable."""
+        if self._streaming_applicable(expr, inputs):
+            from repro.store.stream import NotStreamable
+            try:
+                return self._compile_streamed(expr).run(**inputs)
+            except NotStreamable:
+                pass
+        return self.compile(expr).run(**inputs)
+
+    def _streaming_applicable(self, expr, inputs) -> bool:
+        """Cheap pre-check: is the out-of-core path worth consulting?
+
+        True when the engine has a memory budget or any input is a
+        host-resident store handle.  Only single-root logical plans on
+        the host executors stream; everything else runs resident.
+        """
+        if isinstance(expr, (dict, tuple, list)):
+            return False
+        if self._resolve_executor() not in ("reference", "jit"):
+            return False
+        has_host = any(hasattr(v, "to_relation") and
+                       hasattr(v, "split_dim") for v in inputs.values())
+        if not (has_host or self.memory_budget is not None):
+            return False
+        try:
+            return isinstance(as_node(expr), TraNode)
+        except TypeError:
+            return False
+
+    def _compile_streamed(self, expr, force: bool = False) -> CompiledExpr:
+        """Compile ``expr`` as an out-of-core streamed artifact.
+
+        Plans the expression through :class:`repro.store.StreamExecutor`
+        (raising :class:`repro.store.NotStreamable` when the plan has no
+        streamable axis, or — unless ``force`` — when it fits the budget
+        resident) and caches a :class:`CompiledExpr` whose call runs the
+        chunked double-buffered schedule.  ``force`` (the degradation
+        ladder's rung-1 knob) streams even plans the estimator judges
+        resident.
+        """
+        from repro.launch.metering import StreamStats
+        from repro.store.stream import NotStreamable, StreamExecutor
+        if isinstance(expr, (dict, tuple, list)):
+            raise NotStreamable("multi-root programs run resident")
+        root = as_node(expr)
+        if not isinstance(root, TraNode):
+            raise NotStreamable("physical IA plans run resident")
+        if self._resolve_executor() not in ("reference", "jit"):
+            raise NotStreamable(
+                "out-of-core streaming chunks compile on the host "
+                "executors (reference/jit) only")
+        key = ("streamed", plan_sig(root), self._resolve_executor(),
+               self.optimize, self.fuse, self.memory_budget, bool(force))
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+            hit.hits += 1
+            return hit.compiled
+        se = StreamExecutor(self)
+        splan = se.plan(root, force=force)   # may raise NotStreamable
+        self.cache_misses += 1
+        stats = StreamStats(mode=splan.mode, budget_bytes=splan.budget)
+        out_info = splan.out_info
+        compiled = CompiledExpr(
+            executor=f"{self._resolve_executor()}+stream",
+            roots=(root,),
+            input_rtypes=_input_nodes((root,)),
+            out_infos=(out_info,),
+            _call=lambda env: (se.execute(splan, env, stats),),
+            streamed=True,
+            stream_stats=stats)
+        compiled.artifact_id = (
+            f"{compiled.executor}:"
+            f"{hashlib.sha1(repr(key).encode()).hexdigest()[:10]}")
+        self._cache[key] = _CacheSlot(compiled)
+        return compiled
 
     def compile(self, expr,
                 input_placements: Optional[Dict[str, Placement]] = None,
@@ -519,8 +696,7 @@ class Engine:
         ``_stream`` (the OOM ladder's knob) forces the fused Σ∘⋈ onto the
         chunked streaming fallback even for contraction kernel pairs.
         """
-        if chunk is not None and chunk < 1:
-            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        _validate_chunk(chunk)
         root_names = None
         if isinstance(expr, dict):
             # named multi-root program (train-step state threading):
@@ -758,10 +934,13 @@ class Engine:
             for p in plans:
                 if isinstance(p, IANode):
                     outs.append(_evaluate_ia(p, env, _cache=cache,
-                                             chunk=chunk, ctx=ectx))
+                                             chunk=chunk,
+                                             budget=self.memory_budget,
+                                             ctx=ectx))
                 else:
                     outs.append(_evaluate_tra(p, env, cache,
                                               fuse=self.fuse, chunk=chunk,
+                                              budget=self.memory_budget,
                                               ctx=ectx))
             return tuple(outs)
 
@@ -864,7 +1043,8 @@ class Engine:
                             multi, jitted=jfn, input_names=tuple(names))
 
     def _gspmd_call(self, plans, out_infos, chunk, ctx=None):
-        jfn, names = _jit_ia_plans(plans, self.mesh, chunk=chunk, ctx=ctx)
+        jfn, names = _jit_ia_plans(plans, self.mesh, chunk=chunk,
+                                   budget=self.memory_budget, ctx=ctx)
 
         def call(env):
             datas = jfn(*(env[n].data for n in names))
@@ -875,5 +1055,6 @@ class Engine:
 
     def _shardmap_call(self, plans, chunk, ctx=None):
         from repro.core.shardmap_exec import _build_shardmap
-        call, _, _ = _build_shardmap(plans, self.mesh, chunk=chunk, ctx=ctx)
+        call, _, _ = _build_shardmap(plans, self.mesh, chunk=chunk,
+                                     budget=self.memory_budget, ctx=ctx)
         return call

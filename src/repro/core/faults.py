@@ -77,6 +77,7 @@ class _Fault:
     times: int = 1                         # remaining firings; -1 = unlimited
     delay: float = 0.0                     # straggler sleep seconds
     ok_chunk: int = 0                      # oom: succeed when streaming chunk <= this
+    ok_bytes: Optional[int] = None         # oom: succeed when live bytes <= this
     executor: Optional[str] = None         # compile: executor that fails
 
     def matches_node(self, nid: int, label: str) -> bool:
@@ -118,13 +119,21 @@ class FaultInjector:
         return self
 
     def inject_oom(self, *, node=None, ok_chunk: int = 1,
+                   ok_bytes: Optional[int] = None,
                    times: int = -1) -> "FaultInjector":
         """OOM whenever the fused contraction runs unstreamed or with a
         streaming chunk larger than ``ok_chunk`` — models a fixed device
         memory budget, so the halving ladder deterministically bottoms
-        out at the first rung that 'fits'."""
+        out at the first rung that 'fits'.
+
+        ``ok_bytes`` switches to the byte-accurate device model instead:
+        the contraction fits iff its estimated live bytes (inputs +
+        in-flight slices + output, as reported by the fused path) are
+        under the budget.  This is the model the out-of-core tests use —
+        an over-budget plan OOMs resident but fits once the host relation
+        store streams its operands in key-range chunks."""
         self._faults.append(_Fault("oom", node=node, ok_chunk=ok_chunk,
-                                   times=times))
+                                   ok_bytes=ok_bytes, times=times))
         return self
 
     def inject_compile_failure(self, *, executor: str,
@@ -182,18 +191,26 @@ class FaultInjector:
         return out
 
     def on_contraction(self, *, stream: bool, chunk: Optional[int],
-                       nid: int = -1, label: str = "") -> None:
+                       nid: int = -1, label: str = "",
+                       bytes_live: Optional[int] = None) -> None:
         """Inside the fused Σ∘⋈ path, before the contraction lowers."""
         for f in self._faults:
             if f.kind != "oom" or not f.matches_node(nid, label):
                 continue
-            fits = stream and chunk is not None and chunk <= f.ok_chunk
+            if f.ok_bytes is not None:
+                fits = bytes_live is not None and bytes_live <= f.ok_bytes
+                limit = f"live bytes <= {f.ok_bytes}"
+            else:
+                fits = stream and chunk is not None and chunk <= f.ok_chunk
+                limit = f"streaming chunk <= {f.ok_chunk}"
             if not fits and f.spend():
                 mode = f"stream chunk={chunk}" if stream else "unstreamed"
+                if bytes_live is not None:
+                    mode += f" ~{bytes_live}B"
                 self.log.append(("oom", f"{label or 'fused'} {mode}"))
                 raise DeviceOOM(
                     f"injected device OOM in fused contraction ({mode}; "
-                    f"fits only at streaming chunk <= {f.ok_chunk})")
+                    f"fits only at {limit})")
 
     def on_compile(self, executor: str) -> None:
         """Before an executor builds its compiled artifact."""

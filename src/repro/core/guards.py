@@ -179,12 +179,12 @@ class ExecContext:
         return self.faults.on_node(nid, label, data)
 
     def on_contraction(self, *, stream: bool, chunk: Optional[int],
-                       node=None) -> None:
+                       node=None, bytes_live: Optional[int] = None) -> None:
         if self.faults is None:
             return
         nid, label = (-1, "") if node is None else self.ids_of(node)
         self.faults.on_contraction(stream=stream, chunk=chunk, nid=nid,
-                                   label=label)
+                                   label=label, bytes_live=bytes_live)
 
     def take_flags(self) -> List[Tuple[str, jax.Array]]:
         flags, self.flags = list(self.flags), []

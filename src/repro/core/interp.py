@@ -58,7 +58,8 @@ def _warn_deprecated(old: str, new: str) -> None:
 def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
                   _cache: Optional[dict] = None,
                   fuse: bool = True,
-                  chunk: Optional[int] = None,
+                  chunk=None,
+                  budget: Optional[int] = None,
                   ctx=None) -> TensorRelation:
     """Walk a logical plan with the dense eager ops.
 
@@ -103,7 +104,7 @@ def _evaluate_tra(node: TraNode, env: Dict[str, TensorRelation],
                 out = tra.fused_join_agg(
                     rec(c.left), rec(c.right), c.join_keys_l,
                     c.join_keys_r, c.kernel, n.group_by, n.kernel,
-                    chunk=chunk, ctx=ctx, node=n)
+                    chunk=chunk, budget=budget, ctx=ctx, node=n)
             else:
                 out = tra.agg(rec(n.child), n.group_by, n.kernel)
         elif isinstance(n, TraReKey):
@@ -152,7 +153,8 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
                  mesh: Optional[Mesh] = None,
                  spmd: bool = False,
                  _cache: Optional[dict] = None,
-                 chunk: Optional[int] = None,
+                 chunk=None,
+                 budget: Optional[int] = None,
                  ctx=None) -> TensorRelation:
     """Evaluate a physical plan.
 
@@ -166,7 +168,7 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
         return cache[id(node)]
 
     def rec(n):
-        return _evaluate_ia(n, env, mesh, spmd, cache, chunk, ctx)
+        return _evaluate_ia(n, env, mesh, spmd, cache, chunk, budget, ctx)
 
     def constrain(rel: TensorRelation, placement: Placement) -> TensorRelation:
         if not spmd or mesh is None or placement is None:
@@ -206,7 +208,7 @@ def _evaluate_ia(node: IANode, env: Dict[str, TensorRelation],
                                  node.join_keys_l, node.join_keys_r,
                                  node.join_kernel, node.group_by,
                                  node.agg_kernel, chunk=chunk,
-                                 ctx=ctx, node=node)
+                                 budget=budget, ctx=ctx, node=node)
         ti = infer(node)
         out = constrain(out, ti.placement)
     elif isinstance(node, LocalFilter):
@@ -296,7 +298,8 @@ def _merge_ia_inputs(roots) -> Dict[str, IAInput]:
 
 
 def _jit_ia_plans(roots, mesh: Mesh,
-                  chunk: Optional[int] = None,
+                  chunk=None,
+                  budget: Optional[int] = None,
                   ctx=None) -> Tuple[Callable, list]:
     """Multi-root variant of :func:`_jit_ia_plan`: one jitted function
     ``(*arrays) -> tuple(arrays)`` executing every physical root under the
@@ -313,7 +316,7 @@ def _jit_ia_plans(roots, mesh: Mesh,
         cache: dict = {}
         return tuple(
             _evaluate_ia(r, env, mesh=mesh, spmd=True, _cache=cache,
-                         chunk=chunk, ctx=ctx).data
+                         chunk=chunk, budget=budget, ctx=ctx).data
             for r in roots)
 
     in_shardings = tuple(

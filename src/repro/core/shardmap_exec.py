@@ -144,8 +144,8 @@ def _move(x: jax.Array, src: Placement, tgt: Placement,
     return x
 
 
-def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None,
-                    ctx=None):
+def _build_shardmap(roots, mesh: Mesh, chunk=None,
+                    budget: Optional[int] = None, ctx=None):
     """Build the explicit-collective callable ONCE for a tuple of physical
     roots.
 
@@ -240,7 +240,7 @@ def _build_shardmap(roots, mesh: Mesh, chunk: Optional[int] = None,
                 out = tra.fused_join_agg(
                     lrel, rrel, node.join_keys_l, node.join_keys_r,
                     node.join_kernel, node.group_by, node.agg_kernel,
-                    chunk=chunk, ctx=ctx, node=node).data
+                    chunk=chunk, budget=budget, ctx=ctx, node=node).data
             elif isinstance(node, LocalMap):
                 ct = cache[id(node.child)]
                 cx = rec(node.child)

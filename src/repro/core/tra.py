@@ -549,7 +549,8 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
                    join_keys_l: Sequence[int], join_keys_r: Sequence[int],
                    join_kernel: Kernel, group_by: Sequence[int],
                    agg_kernel: Kernel, *,
-                   chunk: Optional[int] = None,
+                   chunk=None,
+                   budget: Optional[int] = None,
                    ctx=None, node=None) -> TensorRelation:
     """Σ_(groupBy, aggOp) ∘ ⋈_(jkl, jkr, projOp) without the grid.
 
@@ -563,8 +564,11 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
     * a chunked ``lax.fori_loop`` streaming reduction for every other
       associative kernel pair.  ``chunk`` is the number of grid slices
       each loop step materializes; ``None`` derives it from
-      :data:`DEFAULT_CHUNK_BYTES` (configurable per
-      :class:`~repro.core.engine.Engine` via its ``chunk`` parameter).
+      :data:`DEFAULT_CHUNK_BYTES`, and ``"auto"`` (the Engine default)
+      autotunes it from the device memory ``budget`` via the live-slice
+      bytes model in :mod:`repro.store.autotune` (configurable per
+      :class:`~repro.core.engine.Engine` via its ``chunk`` /
+      ``memory_budget`` parameters).
 
     ``ctx`` (an :class:`~repro.core.guards.ExecContext`) hooks the fault
     injector's device-OOM model before each contraction lowers and, when
@@ -589,11 +593,21 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
     out_key_shape = tuple(g.out_key_shape[d] for d in gb)
     out_mask = _fused_out_mask(g, gb, reduce_dims)
 
+    # live-bytes estimates for the injected-OOM device model (ok_bytes):
+    # inputs + output for the one-shot contraction; inputs + chunk slices
+    # + accumulator/partial pair for the streamed fallback
+    itemsize = jnp.dtype(left.data.dtype).itemsize
+    out_floats = (math.prod(out_key_shape) if out_key_shape else 1) \
+        * (math.prod(out_bound) if out_bound else 1)
+    in_bytes = (g.ldata.size + g.rdata_t.size) * itemsize
+    out_bytes = out_floats * itemsize
+
     streaming = ctx is not None and ctx.stream
     if (not streaming and agg_kernel.name == "matAdd"
             and join_kernel.name in _CONTRACTION_JOINS):
         if ctx is not None:
-            ctx.on_contraction(stream=False, chunk=None, node=node)
+            ctx.on_contraction(stream=False, chunk=None, node=node,
+                               bytes_live=in_bytes + out_bytes)
         if (join_kernel.name == "matMul" and g.lmask is None
                 and g.rmask_t is None and set(reduce_dims) == set(jkl)):
             data = _fused_matmul_2d(g, left, right, jkl, gb)
@@ -606,13 +620,17 @@ def fused_join_agg(left: TensorRelation, right: TensorRelation,
     if has_mask and agg_kernel.identity is None:
         # cannot identity-fill holes — mirror tra.agg's requirement
         return agg(join(left, right, jkl, jkr, join_kernel), gb, agg_kernel)
-    if chunk is None:
-        itemsize = jnp.dtype(left.data.dtype).itemsize
-        slice_floats = (math.prod(out_key_shape) if out_key_shape else 1) \
-            * (math.prod(out_bound) if out_bound else 1)
-        chunk = max(1, DEFAULT_CHUNK_BYTES // max(1, slice_floats * itemsize))
+    if chunk is None or chunk == "auto":
+        slice_bytes = max(1, out_floats * itemsize)
+        if chunk == "auto":
+            from repro.store.autotune import chunk_slices
+            chunk = chunk_slices(slice_bytes, out_bytes, budget)
+        else:
+            chunk = max(1, DEFAULT_CHUNK_BYTES // slice_bytes)
     if ctx is not None:
-        ctx.on_contraction(stream=True, chunk=chunk, node=node)
+        ctx.on_contraction(
+            stream=True, chunk=chunk, node=node,
+            bytes_live=in_bytes + chunk * out_bytes + 2 * out_bytes)
     data = _fused_chunked(g, left, right, join_kernel, gb, reduce_dims,
                           agg_kernel, chunk)
     return TensorRelation(

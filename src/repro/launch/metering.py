@@ -369,6 +369,61 @@ def percentiles(values: Sequence[float],
     return out
 
 
+@dataclasses.dataclass
+class StreamStats:
+    """Per-plan out-of-core streaming counters (``repro.store``).
+
+    One instance lives on each streamed compile-cache artifact
+    (``Engine.cache_info()`` surfaces it) and accumulates across ``run``
+    calls of that artifact.  ``copy_s`` is total wall spent issuing
+    host→device chunk transfers; ``hidden_copy_s`` is the portion issued
+    while the previous chunk's compute was already dispatched — the
+    double-buffered prefetches — so ``overlap_efficiency`` → (n−1)/n for
+    an n-chunk stream when transfers are uniform.  ``peak_device_bytes``
+    is the analytic live set (resident operands + current chunk +
+    prefetched chunk + output side), the quantity the memory-budget
+    planner bounds.  Spill counters are deltas of the backing
+    :class:`repro.store.RelationStore`'s disk tier over this plan's runs.
+    """
+
+    mode: str = "resident"          # resident | stream-out | stream-reduce
+    budget_bytes: Optional[int] = None
+    runs: int = 0
+    chunks: int = 0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    copy_s: float = 0.0
+    hidden_copy_s: float = 0.0
+    compute_s: float = 0.0
+    spill_events: int = 0
+    spill_bytes: int = 0
+    peak_device_bytes: int = 0
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Fraction of transfer wall hidden behind in-flight compute."""
+        if self.copy_s <= 0.0:
+            return 1.0
+        return min(1.0, self.hidden_copy_s / self.copy_s)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "mode": self.mode,
+            "budget_bytes": self.budget_bytes,
+            "runs": self.runs,
+            "chunks": self.chunks,
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes,
+            "copy_s": round(self.copy_s, 6),
+            "hidden_copy_s": round(self.hidden_copy_s, 6),
+            "compute_s": round(self.compute_s, 6),
+            "overlap_efficiency": round(self.overlap_efficiency, 4),
+            "spill_events": self.spill_events,
+            "spill_bytes": self.spill_bytes,
+            "peak_device_bytes": self.peak_device_bytes,
+        }
+
+
 class SpanMeter:
     """Collects :class:`RequestSpan`\\ s and summarizes them.
 

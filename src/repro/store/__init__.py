@@ -1,0 +1,26 @@
+"""Out-of-core TRA execution: host-RAM relation store + plan streaming.
+
+The subsystem behind ``Engine(memory_budget=...)`` and ``HostRelation``
+inputs — relations larger than device RAM live here as key-range blocks
+(with an optional disk spill tier) and stream chunk-by-chunk through
+compiled plans with double-buffered H2D transfers.  See
+``docs/out_of_core.md``.
+"""
+from repro.store.autotune import (chunk_slices, device_memory_budget,
+                                  stream_budget_bytes)
+from repro.store.relation import (DEFAULT_BLOCK_BYTES, HostRelation,
+                                  RelationStore, StoreError)
+from repro.store.stream import NotStreamable, StreamExecutor, StreamPlan
+
+__all__ = [
+    "DEFAULT_BLOCK_BYTES",
+    "HostRelation",
+    "NotStreamable",
+    "RelationStore",
+    "StoreError",
+    "StreamExecutor",
+    "StreamPlan",
+    "chunk_slices",
+    "device_memory_budget",
+    "stream_budget_bytes",
+]

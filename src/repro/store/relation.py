@@ -1,0 +1,310 @@
+"""Host-RAM relation store: chunked, key-range-partitioned tensor relations.
+
+The paper's headline claim — TRA handles "matrices or tensors that do not
+easily fit into the RAM of an ASIC" — needs relations that *live off the
+device*.  A :class:`HostRelation` is a handle to one tensor relation held
+as an ordered list of contiguous key-range **blocks** along a single key
+dimension (``split_dim``), each block a pinned host ``numpy`` buffer.  The
+handle is usable anywhere ``Engine.run`` accepts a relation: the Engine
+either streams it chunk-by-chunk through the plan (``repro.store.stream``)
+or materializes it once on device when the plan fits.
+
+A :class:`RelationStore` owns the blocks.  It tracks resident host bytes
+and, past an optional ``ram_limit_bytes``, spills least-recently-used
+blocks to a disk tier (``numpy`` ``.npy`` files under ``spill_dir``),
+faulting them back in transparently on access — so the host tier itself
+degrades gracefully instead of OOMing the driver process.
+
+Blocks are split at ``block_bytes`` targets (default 64 MiB) so spill and
+streaming granularity stay decoupled from how the user hands the data in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.tra import RelType, TensorRelation
+
+DEFAULT_BLOCK_BYTES = 64 * 1024 * 1024
+
+
+class StoreError(RuntimeError):
+    """Raised on malformed store usage (shape/range mismatches)."""
+
+
+@dataclasses.dataclass
+class _Block:
+    """One contiguous key-range ``[start, stop)`` along the split dim."""
+
+    start: int
+    stop: int
+    data: Optional[np.ndarray]      # None while spilled to disk
+    path: Optional[str] = None      # .npy file when spilled
+    nbytes: int = 0
+    seq: int = 0                    # LRU clock; larger = more recent
+
+
+class HostRelation:
+    """A tensor relation held in host RAM as key-range blocks.
+
+    ``rtype`` is the full (dense-layout) relation type; blocks partition
+    key dimension ``split_dim``.  ``append`` grows the key frontier — a
+    streamed plan writes its output back chunk-by-chunk; ``complete`` is
+    True once the blocks cover ``rtype.key_shape[split_dim]``.  ``mask``
+    (a host bool grid over the key space) carries non-continuous
+    relations; streaming requires continuity, so masked handles only take
+    the materialize-resident path.
+    """
+
+    def __init__(self, store: "RelationStore", name: str, rtype: RelType,
+                 split_dim: int = 0,
+                 mask: Optional[np.ndarray] = None) -> None:
+        if not 0 <= split_dim < rtype.key_arity:
+            raise StoreError(
+                f"split_dim {split_dim} out of range for key arity "
+                f"{rtype.key_arity}")
+        self.store = store
+        self.name = name
+        self.rtype = rtype
+        self.split_dim = split_dim
+        self.mask = None if mask is None else np.asarray(mask, bool)
+        self._blocks: List[_Block] = []
+
+    # -- shape/bookkeeping -------------------------------------------------
+    @property
+    def nkeys(self) -> int:
+        """Key count along the split dimension."""
+        return self.rtype.key_shape[self.split_dim]
+
+    @property
+    def frontier(self) -> int:
+        """Keys covered so far along the split dimension."""
+        return self._blocks[-1].stop if self._blocks else 0
+
+    @property
+    def complete(self) -> bool:
+        return self.frontier >= self.nkeys
+
+    @property
+    def nbytes(self) -> int:
+        """Full dense size (what a device materialization would allocate)."""
+        return self.rtype.nfloats * np.dtype(self.rtype.dtype).itemsize
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(b.nbytes for b in self._blocks)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"HostRelation({self.name!r}, {self.rtype}, "
+                f"split_dim={self.split_dim}, blocks={len(self._blocks)}, "
+                f"frontier={self.frontier}/{self.nkeys})")
+
+    # -- writes ------------------------------------------------------------
+    def append(self, array) -> None:
+        """Append the next key range along the split dim (host copy)."""
+        arr = np.ascontiguousarray(np.asarray(array))
+        want = list(self.rtype.key_shape) + list(self.rtype.bound)
+        if arr.ndim != len(want):
+            raise StoreError(
+                f"append to {self.name!r}: rank {arr.ndim} != {len(want)}")
+        n = arr.shape[self.split_dim]
+        want[self.split_dim] = n
+        if list(arr.shape) != want:
+            raise StoreError(
+                f"append to {self.name!r}: shape {arr.shape} != {tuple(want)}")
+        if self.frontier + n > self.nkeys:
+            raise StoreError(
+                f"append to {self.name!r}: frontier {self.frontier}+{n} "
+                f"exceeds {self.nkeys} keys")
+        self.store._admit_range(self, arr)
+
+    # -- reads -------------------------------------------------------------
+    def slice(self, lo: int, hi: int) -> np.ndarray:
+        """Dense host array for keys ``[lo, hi)`` along the split dim."""
+        if not 0 <= lo < hi <= self.frontier:
+            raise StoreError(
+                f"slice [{lo}, {hi}) outside frontier {self.frontier} "
+                f"of {self.name!r}")
+        parts = []
+        for b in self._blocks:
+            if b.stop <= lo or b.start >= hi:
+                continue
+            data = self.store._loaded(b)
+            s, e = max(lo, b.start) - b.start, min(hi, b.stop) - b.start
+            idx = [slice(None)] * data.ndim
+            idx[self.split_dim] = slice(s, e)
+            parts.append(data[tuple(idx)])
+        if len(parts) == 1:
+            return parts[0]
+        return np.concatenate(parts, axis=self.split_dim)
+
+    def mask_slice(self, lo: int, hi: int) -> Optional[np.ndarray]:
+        if self.mask is None:
+            return None
+        idx = [slice(None)] * self.mask.ndim
+        idx[self.split_dim] = slice(lo, hi)
+        return self.mask[tuple(idx)]
+
+    def to_numpy(self) -> np.ndarray:
+        if not self.complete:
+            raise StoreError(
+                f"{self.name!r} is incomplete ({self.frontier}/{self.nkeys} "
+                f"keys) — cannot materialize")
+        return self.slice(0, self.nkeys)
+
+    def to_relation(self) -> TensorRelation:
+        """Materialize the whole relation on the default device."""
+        import jax
+        data = jax.device_put(self.to_numpy())
+        mask = None
+        if self.mask is not None:
+            import jax.numpy as jnp
+            mask = jnp.asarray(self.mask)
+        return TensorRelation(data, self.rtype, mask)
+
+
+class RelationStore:
+    """Owns :class:`HostRelation` blocks; host tier + optional disk spill.
+
+    ``ram_limit_bytes=None`` (default) never spills.  With a limit, blocks
+    past the budget spill LRU-first to ``.npy`` files and fault back in on
+    access; ``spill_events`` / ``spill_bytes`` / ``unspill_events`` feed
+    the :class:`repro.launch.metering.StreamStats` counters.
+    """
+
+    def __init__(self, ram_limit_bytes: Optional[int] = None,
+                 spill_dir: Optional[str] = None,
+                 block_bytes: int = DEFAULT_BLOCK_BYTES) -> None:
+        self.ram_limit_bytes = ram_limit_bytes
+        self.block_bytes = max(1, block_bytes)
+        self._spill_dir = spill_dir
+        self._rels: Dict[str, HostRelation] = {}
+        self._seq = 0
+        self.ram_bytes = 0
+        self.spill_events = 0
+        self.spill_bytes = 0
+        self.unspill_events = 0
+        self.unspill_bytes = 0
+
+    # -- relation lifecycle ------------------------------------------------
+    def put(self, name: str, value, *, rtype: Optional[RelType] = None,
+            split_dim: int = 0) -> HostRelation:
+        """Ingest a relation (TensorRelation / array / HostRelation)."""
+        mask = None
+        if isinstance(value, HostRelation):
+            rtype = value.rtype
+            mask = value.mask
+            data = value.to_numpy()
+        elif isinstance(value, TensorRelation):
+            rtype = value.rtype
+            data = np.asarray(value.data)
+            if value.mask is not None:
+                mask = np.asarray(value.mask)
+        else:
+            data = np.asarray(value)
+            if rtype is None:
+                raise StoreError(
+                    "put of a raw array needs an explicit rtype=")
+            want = tuple(rtype.key_shape) + tuple(rtype.bound)
+            if data.shape != want:
+                raise StoreError(
+                    f"put({name!r}): array shape {data.shape} != dense "
+                    f"layout {want}")
+        hr = self.create(name, rtype, split_dim=split_dim, mask=mask)
+        n = hr.nkeys
+        per_key = max(1, hr.nbytes // max(1, n))
+        step = max(1, self.block_bytes // per_key)
+        for lo in range(0, n, step):
+            idx = [slice(None)] * data.ndim
+            idx[split_dim] = slice(lo, min(lo + step, n))
+            hr.append(data[tuple(idx)])
+        return hr
+
+    def create(self, name: str, rtype: RelType, *, split_dim: int = 0,
+               mask: Optional[np.ndarray] = None) -> HostRelation:
+        """New (empty) relation to be filled with ``append``; replaces any
+        existing relation of the same name."""
+        if name in self._rels:
+            self.delete(name)
+        hr = HostRelation(self, name, rtype, split_dim=split_dim, mask=mask)
+        self._rels[name] = hr
+        return hr
+
+    def get(self, name: str) -> HostRelation:
+        return self._rels[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._rels
+
+    def relations(self) -> Dict[str, HostRelation]:
+        return dict(self._rels)
+
+    def delete(self, name: str) -> None:
+        hr = self._rels.pop(name, None)
+        if hr is None:
+            return
+        for b in hr._blocks:
+            if b.data is not None:
+                self.ram_bytes -= b.nbytes
+            if b.path is not None and os.path.exists(b.path):
+                os.unlink(b.path)
+        hr._blocks = []
+
+    # -- block admission / spill tier --------------------------------------
+    def _admit_range(self, hr: HostRelation, arr: np.ndarray) -> None:
+        n = arr.shape[hr.split_dim]
+        per_key = max(1, arr.nbytes // max(1, n))
+        step = max(1, self.block_bytes // per_key)
+        for lo in range(0, n, step):
+            idx = [slice(None)] * arr.ndim
+            idx[hr.split_dim] = slice(lo, min(lo + step, n))
+            part = np.ascontiguousarray(arr[tuple(idx)])
+            self._seq += 1
+            blk = _Block(start=hr.frontier,
+                         stop=hr.frontier + part.shape[hr.split_dim],
+                         data=part, nbytes=part.nbytes, seq=self._seq)
+            hr._blocks.append(blk)
+            self.ram_bytes += blk.nbytes
+            self._maybe_spill(keep=blk)
+
+    def _spill_path(self, blk: _Block) -> str:
+        if self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="repro-store-")
+        os.makedirs(self._spill_dir, exist_ok=True)
+        return os.path.join(self._spill_dir, f"blk-{id(blk):x}-{blk.seq}.npy")
+
+    def _maybe_spill(self, keep: Optional[_Block] = None) -> None:
+        if self.ram_limit_bytes is None:
+            return
+        while self.ram_bytes > self.ram_limit_bytes:
+            victim = None
+            for hr in self._rels.values():
+                for b in hr._blocks:
+                    if b.data is None or b is keep:
+                        continue
+                    if victim is None or b.seq < victim.seq:
+                        victim = b
+            if victim is None:
+                return                  # nothing evictable — stay resident
+            path = victim.path or self._spill_path(victim)
+            np.save(path, victim.data)
+            victim.path = path
+            victim.data = None
+            self.ram_bytes -= victim.nbytes
+            self.spill_events += 1
+            self.spill_bytes += victim.nbytes
+
+    def _loaded(self, blk: _Block) -> np.ndarray:
+        self._seq += 1
+        blk.seq = self._seq             # touch for LRU
+        if blk.data is None:
+            blk.data = np.load(blk.path)
+            self.ram_bytes += blk.nbytes
+            self.unspill_events += 1
+            self.unspill_bytes += blk.nbytes
+            self._maybe_spill(keep=blk)
+        return blk.data

@@ -1,0 +1,504 @@
+"""Plan-level streaming through the host relation store.
+
+This generalizes the chunked ``fused_join_agg`` reduction (which streams
+*grid slices of one contraction*) into an out-of-core pass over a whole
+logical plan: pick one key dimension, slice every node that carries it,
+and execute the plan chunk-by-chunk with per-chunk host→device copies
+double-buffered against the in-flight chunk's compute.  Two schedules:
+
+``stream-out``
+    The streamed dimension survives to the *root output*.  Each chunk
+    program computes an output key range; chunks either concatenate on
+    device or — when the output itself is oversized — append straight
+    back into the :class:`~repro.store.relation.RelationStore`, so
+    multi-node plans (a two-matmul chain, the §5.3 layer stack) run with
+    bounded device footprint and no whole-intermediate rematerialization.
+
+``stream-reduce``
+    The root is an associative ``TraAgg(TraJoin)`` contraction and the
+    streamed dimension is *reduced away*.  Each chunk contributes a
+    partial of the full output; partials fold on device with the agg
+    kernel — the paper's Σ∘⋈ streaming reduction lifted to key ranges
+    whose operand slices live off-device until their turn.
+
+The **carrier analysis** (:func:`_slot_walk`) decides which nodes a
+streamed dimension passes through: joins slice both sides of a joined
+dimension (the frontier-min rule makes one-sided slicing silently wrong),
+aggregations map output dims through ``group_by``, and any subtree the
+dimension does not reach stays device-resident for the whole run.  Plans
+where the same node would need slicing along two dims, or the same input
+name is needed both sliced and whole, are rejected (:class:`NotStreamable`)
+and fall back to resident execution.
+
+Chunk sizing probes :func:`repro.core.cost.plan_peak_bytes` on 1- and
+2-key rebuilt programs — an affine live-bytes model ``peak(c) ≈ fixed +
+c·slope`` — and solves for the largest chunk whose live set (plus the
+double-buffered prefetch) fits the memory budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost import plan_peak_bytes
+from repro.core.plan import (TraAgg, TraConcat, TraConst, TraFilter,
+                             TraInput, TraJoin, TraNode, TraPad, TraReKey,
+                             TraTile, TraTransform, TypeInfo, as_node,
+                             infer, postorder)
+from repro.core.tra import TensorRelation, can_fuse
+from repro.store.autotune import stream_budget_bytes
+from repro.store.relation import HostRelation, RelationStore
+
+
+class NotStreamable(RuntimeError):
+    """The plan (or this run's inputs) cannot take the streaming path."""
+
+
+@dataclasses.dataclass
+class StreamPlan:
+    """Compile-time streaming decision for one logical root."""
+
+    mode: str                       # resident | stream-out | stream-reduce
+    root: TraNode
+    out_info: TypeInfo
+    budget: Optional[int] = None
+    dim: int = -1                   # streamed output / join-out key dim
+    sliced: Dict[int, int] = dataclasses.field(default_factory=dict)
+    input_dims: Dict[str, int] = dataclasses.field(default_factory=dict)
+    chunk_keys: int = 0
+    nkeys: int = 0
+    out_store: bool = False
+    agg_kernel: object = None       # stream-reduce fold kernel
+
+    @property
+    def nchunks(self) -> int:
+        if self.mode == "resident" or self.chunk_keys < 1:
+            return 1
+        return -(-self.nkeys // self.chunk_keys)
+
+
+def _itemsize(rtype) -> int:
+    return np.dtype(rtype.dtype).itemsize
+
+
+def _slot_walk(root: TraNode, start: TraNode, start_dim: int,
+               types: Dict[int, TypeInfo]) -> Optional[Dict[int, int]]:
+    """Map ``{id(node): key dim}`` for every node the streamed dim carries
+    through, or None when the plan rejects this dimension."""
+    sliced: Dict[int, int] = {}
+    whole: List[TraNode] = []
+    ok = True
+
+    def ka(n) -> int:
+        return types[id(n)].rtype.key_arity
+
+    def walk(n, d) -> None:
+        nonlocal ok
+        if not ok:
+            return
+        prev = sliced.get(id(n))
+        if prev is not None:
+            if prev != d:
+                ok = False          # one node, two streamed dims
+            return
+        sliced[id(n)] = d
+        if isinstance(n, (TraInput, TraConst)):
+            return
+        if isinstance(n, TraTransform):
+            walk(n.child, d)
+        elif isinstance(n, TraAgg):
+            walk(n.child, n.group_by[d])
+        elif isinstance(n, TraJoin):
+            kl = ka(n.left)
+            if d < kl:
+                walk(n.left, d)
+                if d in n.join_keys_l:
+                    # joined dim: min-frontier rule — slice BOTH sides
+                    walk(n.right, n.join_keys_r[n.join_keys_l.index(d)])
+                else:
+                    whole.append(n.right)
+            else:
+                whole.append(n.left)
+                r_nonjoin = [dd for dd in range(ka(n.right))
+                             if dd not in n.join_keys_r]
+                walk(n.right, r_nonjoin[d - kl])
+        elif isinstance(n, TraTile):
+            if d < ka(n.child):
+                walk(n.child, d)
+            else:
+                ok = False          # the appended tile dim splits arrays
+        elif isinstance(n, TraConcat):
+            walk(n.child, d if d < n.key_dim else d + 1)
+        else:
+            # TraReKey / TraFilter / TraPad: arbitrary key rewrites — a key
+            # range of the output has no static preimage range
+            ok = False
+
+    walk(start, start_dim)
+    if not ok:
+        return None
+    whole_ids = set()
+    for w in whole:
+        for n in postorder(w):
+            whole_ids.add(id(n))
+    if whole_ids & set(sliced):
+        return None                 # same node needed sliced AND whole
+    name_dim: Dict[str, int] = {}
+    for n in postorder(root):
+        if isinstance(n, TraInput) and id(n) in sliced:
+            d = sliced[id(n)]
+            if name_dim.setdefault(n.name, d) != d:
+                return None         # one input, two streamed dims
+    for n in postorder(root):
+        if isinstance(n, TraInput) and id(n) not in sliced \
+                and n.name in name_dim:
+            return None             # same name needed sliced AND whole
+    if not name_dim:
+        return None                 # nothing would actually stream
+    return sliced
+
+
+def _rebuild(root: TraNode, sliced: Dict[int, int], length: int) -> TraNode:
+    """The chunk program: ``root`` with every sliced node's streamed key
+    dim shrunk to ``length``.  Whole subtrees are reused as the SAME
+    objects, so their plan signatures — and the Engine's structural
+    compile cache entries — are shared across every chunk."""
+    memo: Dict[int, TraNode] = {}
+
+    def rb(n):
+        if id(n) in memo:
+            return memo[id(n)]
+        if isinstance(n, (TraInput, TraConst)):
+            if id(n) in sliced:
+                d = sliced[id(n)]
+                ks = list(n.rtype.key_shape)
+                ks[d] = length
+                out = dataclasses.replace(n, rtype=n.rtype.with_key_shape(ks))
+            else:
+                out = n
+        else:
+            if isinstance(n, TraJoin):
+                kids = {"left": rb(n.left), "right": rb(n.right)}
+                changed = kids["left"] is not n.left \
+                    or kids["right"] is not n.right
+            else:
+                kids = {"child": rb(n.child)}
+                changed = kids["child"] is not n.child
+            out = dataclasses.replace(n, **kids) if changed else n
+        memo[id(n)] = out
+        return out
+
+    return rb(root)
+
+
+class StreamExecutor:
+    """Schedules a logical plan through the store under a byte budget.
+
+    Owned by an :class:`~repro.core.engine.Engine`; ``plan`` runs at
+    compile time (pure shape/byte analysis), ``execute`` drives the
+    double-buffered chunk loop and accounts every transfer into a
+    :class:`~repro.launch.metering.StreamStats`.
+    """
+
+    def __init__(self, engine, store: Optional[RelationStore] = None,
+                 budget: Optional[int] = None) -> None:
+        self.engine = engine
+        self.store = store if store is not None else engine.store
+        self.budget = budget if budget is not None \
+            else getattr(engine, "memory_budget", None)
+
+    # ------------------------------------------------------------------
+    # planning
+    # ------------------------------------------------------------------
+    def plan(self, root, *, force: bool = False,
+             chunk_keys: Optional[int] = None) -> StreamPlan:
+        root = as_node(root)
+        if not isinstance(root, TraNode):
+            raise NotStreamable(
+                "only logical (TRA) roots stream through the store")
+        types: Dict[int, TypeInfo] = {}
+        out_info = infer(root, cache=types)
+        budget = stream_budget_bytes(self.budget)
+        total = plan_peak_bytes(root, fuse=getattr(self.engine, "fuse", True))
+        if total <= budget and not force:
+            return StreamPlan("resident", root, out_info, budget)
+        # masks (static on types, or runtime ones minted by in-plan
+        # filters/rekeys/pads) violate the continuity the chunk
+        # concatenation relies on — those plans only run resident
+        holey = any(types[id(n)].mask is not None
+                    or isinstance(n, (TraFilter, TraPad, TraReKey))
+                    for n in postorder(root))
+        if holey:
+            if force:
+                raise NotStreamable(
+                    "streaming requires continuous relations (masked "
+                    "types or in-plan filter/rekey/pad run resident)")
+            return StreamPlan("resident", root, out_info, budget)
+
+        # -- stream-out: a root output key dim, largest first ------------
+        out_ks = out_info.rtype.key_shape
+        for d in sorted(range(len(out_ks)), key=lambda dd: -out_ks[dd]):
+            nk = out_ks[d]
+            if nk < 2:
+                continue
+            sliced = _slot_walk(root, root, d, types)
+            if sliced is None:
+                continue
+            ck = self._chunk_keys(root, sliced, types, nk, budget, force,
+                                  chunk_keys)
+            if ck is None:
+                continue
+            out_bytes = out_info.rtype.nfloats * _itemsize(out_info.rtype)
+            sp = StreamPlan("stream-out", root, out_info, budget, d, sliced,
+                            self._input_dims(root, sliced), ck, nk,
+                            out_store=out_bytes > budget // 2)
+            return sp
+
+        # -- stream-reduce: associative contraction over a reduced dim ---
+        if isinstance(root, TraAgg) and isinstance(root.child, TraJoin) \
+                and root.kernel.is_associative \
+                and can_fuse(root.child.kernel, root.kernel):
+            join = root.child
+            j_ks = types[id(join)].rtype.key_shape
+            red = [d for d in range(len(j_ks)) if d not in root.group_by]
+            for d in sorted(red, key=lambda dd: -j_ks[dd]):
+                nk = j_ks[d]
+                if nk < 2:
+                    continue
+                sliced = _slot_walk(root, join, d, types)
+                if sliced is None:
+                    continue
+                ck = self._chunk_keys(root, sliced, types, nk, budget,
+                                      force, chunk_keys)
+                if ck is None:
+                    continue
+                return StreamPlan("stream-reduce", root, out_info, budget,
+                                  d, sliced,
+                                  self._input_dims(root, sliced), ck, nk,
+                                  agg_kernel=root.kernel)
+        raise NotStreamable(
+            "no streamable key dimension found (key rewrites, tiled dims, "
+            "or conflicting slice requirements block every candidate)")
+
+    @staticmethod
+    def _input_dims(root, sliced) -> Dict[str, int]:
+        return {n.name: sliced[id(n)] for n in postorder(root)
+                if isinstance(n, TraInput) and id(n) in sliced}
+
+    def _chunk_keys(self, root, sliced, types, nkeys, budget, force,
+                    override) -> Optional[int]:
+        if override is not None:
+            return max(1, min(int(override), nkeys))
+        fuse = getattr(self.engine, "fuse", True)
+        p1 = plan_peak_bytes(_rebuild(root, sliced, 1), fuse=fuse)
+        p2 = plan_peak_bytes(_rebuild(root, sliced, 2), fuse=fuse) \
+            if nkeys >= 2 else p1
+        slope = max(1, p2 - p1)
+        fixed = max(0, p1 - slope)
+        # the prefetched next chunk's input slices are live during compute
+        prefetch = 0
+        for n in postorder(root):
+            if isinstance(n, TraInput) and id(n) in sliced:
+                ti = types[id(n)]
+                per = (ti.rtype.nfloats * _itemsize(ti.rtype)
+                       // max(1, ti.rtype.key_shape[sliced[id(n)]]))
+                prefetch += per
+        ck = (budget - fixed) // max(1, slope + prefetch)
+        if ck < 1:
+            if not force:
+                return None
+            ck = 1
+        if ck >= nkeys:
+            if not force:
+                return None     # resident part alone is over budget
+            ck = max(1, nkeys // 4)
+        return int(ck)
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def execute(self, splan: StreamPlan, env: Dict[str, object], stats):
+        stores = {self.store}
+        for v in env.values():
+            if isinstance(v, HostRelation):
+                stores.add(v.store)
+        spill0 = sum(s.spill_events for s in stores)
+        spillb0 = sum(s.spill_bytes for s in stores)
+        try:
+            if splan.mode == "resident" or self._must_run_resident(env):
+                out = self._run_resident(splan, env, stats)
+            elif splan.mode == "stream-out":
+                out = self._run_stream_out(splan, env, stats)
+            else:
+                out = self._run_stream_reduce(splan, env, stats)
+        finally:
+            stats.runs += 1
+            stats.spill_events += sum(s.spill_events for s in stores) - spill0
+            stats.spill_bytes += sum(s.spill_bytes for s in stores) - spillb0
+        return out
+
+    @staticmethod
+    def _must_run_resident(env) -> bool:
+        # masked values violate continuity — only the materialized path
+        # (whose executors already know the mask rules) may run them
+        return any(getattr(v, "mask", None) is not None
+                   for v in env.values())
+
+    def _needed(self, root, env) -> Dict[str, object]:
+        names = {n.name for n in postorder(root) if isinstance(n, TraInput)}
+        return {k: v for k, v in env.items() if k in names}
+
+    def _to_device(self, value, stats) -> object:
+        import jax
+        if isinstance(value, HostRelation):
+            rel = value.to_relation()
+            stats.h2d_bytes += rel.data.nbytes
+            return rel
+        data = value.data if isinstance(value, TensorRelation) else value
+        if isinstance(data, np.ndarray):
+            stats.h2d_bytes += data.nbytes
+            dev = jax.device_put(data)
+            if isinstance(value, TensorRelation):
+                return TensorRelation(dev, value.rtype, value.mask)
+            return dev
+        return value
+
+    def _run_resident(self, splan, env, stats):
+        mat = {k: self._to_device(v, stats)
+               for k, v in self._needed(splan.root, env).items()}
+        stats.mode = "resident"
+        return self.engine.compile(splan.root).run(**mat)
+
+    def _load_chunk(self, splan, env, lo, hi, stats, hidden):
+        import jax
+        t0 = time.perf_counter()
+        out: Dict[str, object] = {}
+        moved = 0
+        for name, d in splan.input_dims.items():
+            v = env[name]
+            if isinstance(v, HostRelation):
+                if v.split_dim != d:
+                    raise NotStreamable(
+                        f"input {name!r} is blocked along key dim "
+                        f"{v.split_dim} but the plan streams dim {d}")
+                arr = v.slice(lo, hi)
+                moved += arr.nbytes
+                out[name] = jax.device_put(arr)
+                continue
+            data = v.data if isinstance(v, TensorRelation) else v
+            idx = [slice(None)] * data.ndim
+            idx[d] = slice(lo, hi)
+            if isinstance(data, np.ndarray):
+                arr = data[tuple(idx)]
+                moved += arr.nbytes
+                out[name] = jax.device_put(arr)
+            else:
+                out[name] = data[tuple(idx)]    # already device-resident
+        dt = time.perf_counter() - t0
+        stats.copy_s += dt
+        if hidden:
+            stats.hidden_copy_s += dt
+        stats.h2d_bytes += moved
+        dev_bytes = sum(a.nbytes for a in out.values())
+        return out, dev_bytes
+
+    def _spans(self, splan) -> List[Tuple[int, int]]:
+        nk, ck = splan.nkeys, splan.chunk_keys
+        return [(lo, min(lo + ck, nk)) for lo in range(0, nk, ck)]
+
+    def _chunk_programs(self, splan, spans):
+        progs = {}
+        for lo, hi in spans:
+            n = hi - lo
+            if n not in progs:
+                progs[n] = self.engine.compile(
+                    _rebuild(splan.root, splan.sliced, n))
+        return progs
+
+    def _resident_env(self, splan, env, stats):
+        need = self._needed(splan.root, env)
+        res = {k: self._to_device(v, stats) for k, v in need.items()
+               if k not in splan.input_dims}
+        rbytes = 0
+        for v in res.values():
+            data = v.data if isinstance(v, TensorRelation) else v
+            rbytes += getattr(data, "nbytes", 0)
+        return res, rbytes
+
+    def _run_stream_out(self, splan, env, stats):
+        import jax
+        import jax.numpy as jnp
+        stats.mode = "stream-out"
+        stats.budget_bytes = splan.budget
+        spans = self._spans(splan)
+        progs = self._chunk_programs(splan, spans)
+        resident, resident_bytes = self._resident_env(splan, env, stats)
+        out_hr = None
+        if splan.out_store:
+            out_hr = self.store.create(
+                f"stream-out:{id(splan.root):x}", splan.out_info.rtype,
+                split_dim=splan.dim)
+        collected, kept_bytes = [], 0
+        pending, pending_bytes = self._load_chunk(
+            splan, env, *spans[0], stats, hidden=False)
+        for i, (lo, hi) in enumerate(spans):
+            cur, cur_bytes = pending, pending_bytes
+            t0 = time.perf_counter()
+            out = progs[hi - lo].run(**cur, **resident)
+            if i + 1 < len(spans):
+                pending, pending_bytes = self._load_chunk(
+                    splan, env, *spans[i + 1], stats, hidden=True)
+            else:
+                pending, pending_bytes = None, 0
+            jax.block_until_ready(out.data)
+            stats.compute_s += time.perf_counter() - t0
+            stats.chunks += 1
+            peak = (resident_bytes + cur_bytes + pending_bytes
+                    + out.data.nbytes + kept_bytes)
+            stats.peak_device_bytes = max(stats.peak_device_bytes, peak)
+            if out_hr is not None:
+                host = np.asarray(out.data)             # D2H
+                stats.d2h_bytes += host.nbytes
+                out_hr.append(host)
+            else:
+                collected.append(out.data)
+                kept_bytes += out.data.nbytes
+        if out_hr is not None:
+            return out_hr
+        data = jnp.concatenate(collected, axis=splan.dim)
+        stats.peak_device_bytes = max(
+            stats.peak_device_bytes,
+            resident_bytes + kept_bytes + data.nbytes)
+        return TensorRelation(data, splan.out_info.rtype, None)
+
+    def _run_stream_reduce(self, splan, env, stats):
+        import jax
+        stats.mode = "stream-reduce"
+        stats.budget_bytes = splan.budget
+        spans = self._spans(splan)
+        progs = self._chunk_programs(splan, spans)
+        resident, resident_bytes = self._resident_env(splan, env, stats)
+        acc = None
+        pending, pending_bytes = self._load_chunk(
+            splan, env, *spans[0], stats, hidden=False)
+        for i, (lo, hi) in enumerate(spans):
+            cur, cur_bytes = pending, pending_bytes
+            t0 = time.perf_counter()
+            part = progs[hi - lo].run(**cur, **resident)
+            if i + 1 < len(spans):
+                pending, pending_bytes = self._load_chunk(
+                    splan, env, *spans[i + 1], stats, hidden=True)
+            else:
+                pending, pending_bytes = None, 0
+            acc = part.data if acc is None \
+                else splan.agg_kernel.apply(acc, part.data)
+            jax.block_until_ready(acc)
+            stats.compute_s += time.perf_counter() - t0
+            stats.chunks += 1
+            peak = (resident_bytes + cur_bytes + pending_bytes
+                    + 2 * acc.nbytes)
+            stats.peak_device_bytes = max(stats.peak_device_bytes, peak)
+        return TensorRelation(acc, splan.out_info.rtype, None)

@@ -345,6 +345,49 @@ def check_elastic_tra_resume_8dev():
     print("  elastic TRA checkpoint/resume across mesh shapes: OK")
 
 
+def check_oocore_stream_gspmd_8dev():
+    """ISSUE-8: stream a store-backed host relation through the GSPMD
+    executor.  The chunk programs compile on the 8-device mesh with the
+    streamed key dimension partitioned across sites, each chunk's slice
+    is fetched from the host relation store on demand, and the result
+    matches the single-device reference at 1e-5 with the H2D traffic
+    accounted in the StreamStats ledger."""
+    from repro.core import TensorRelation
+    from repro.launch.metering import StreamStats
+    from repro.store import RelationStore
+    from repro.store.stream import StreamExecutor
+
+    mesh = mesh1d()
+    ka, ba, kb, bb = (64, 4), (4, 8), (4, 2), (8, 4)
+    rng = np.random.default_rng(80)
+    A = np.asarray(rng.normal(size=ka + ba), np.float32)
+    B = np.asarray(rng.normal(size=kb + bb), np.float32)
+    RA = TensorRelation(A, RelType(ka, ba))
+    RB = TensorRelation(B, RelType(kb, bb))
+    expr = matmul_expr(ka, kb, ba, bb)
+    want = Engine(executor="reference", optimize=False).run(
+        expr, A=RA, B=RB)
+
+    places = {"A": Placement.partitioned((0,), ("sites",)),
+              "B": Placement.replicated()}
+    eng = Engine(mesh, executor="gspmd", input_placements=places)
+    store = RelationStore()
+    hrA = store.put("A", RA)            # split along the streamed dim 0
+    se = StreamExecutor(eng, store=store, budget=1 << 30)
+    # chunk_keys=8 → every chunk's streamed key length divides the mesh
+    splan = se.plan(expr, force=True, chunk_keys=8)
+    assert splan.mode == "stream-out" and splan.dim == 0, splan
+    assert splan.nchunks == 8, splan.nchunks
+    stats = StreamStats(mode=splan.mode, budget_bytes=splan.budget)
+    got = se.execute(splan, {"A": hrA, "B": RB}, stats)
+    np.testing.assert_allclose(np.asarray(got.data), np.asarray(want.data),
+                               atol=1e-5, rtol=1e-5)
+    assert stats.chunks == 8 and stats.h2d_bytes >= A.nbytes, stats.as_dict()
+    # the per-chunk programs really went through the GSPMD compile path
+    assert eng.cache_misses >= 1 and eng.cache_info()
+    print("  out-of-core stream through GSPMD (8 devices): OK")
+
+
 if __name__ == "__main__":
     assert jax.device_count() == 8, jax.device_count()
     check_shardmap_strategies()
@@ -355,4 +398,5 @@ if __name__ == "__main__":
     check_multi_root_and_value_and_grad()
     check_train_step_8dev()
     check_elastic_tra_resume_8dev()
+    check_oocore_stream_gspmd_8dev()
     print("ALL DISTRIBUTED CHECKS PASSED")

@@ -1,0 +1,291 @@
+"""Out-of-core streaming execution (the ISSUE-8 tentpole).
+
+Property and integration coverage of ``repro.store.StreamExecutor`` and
+the spill-aware ``Engine(memory_budget=...)`` mode:
+
+* chunk-size sweeps: the force-planned streaming schedules (stream-out
+  and stream-reduce) match every executor's resident result at 1e-5 for
+  every ``chunk_keys``;
+* masked relations refuse the streaming fast path and fall back to the
+  resident executors (whose mask rules already hold);
+* an over-budget fused contraction AND a chained two-matmul plan with
+  operands ≥4× the budget complete through the store with the metered
+  peak device live set under the budget (zero whole-intermediate
+  rematerialization) and bit-compatible results;
+* fault injection over store-backed runs: the byte-accurate
+  ``inject_oom(ok_bytes=...)`` model OOMs the resident path and the
+  ``degrade=True`` ladder recovers on its *first* rung — out-of-core
+  streaming — without shrinking the fused chunk; a ``SimulatedFailure``
+  killing a run mid-stream leaves the store consistent for a clean
+  retry.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core as tra
+from repro.core import Engine, RelType, TensorRelation, from_tensor
+from repro.core.faults import FaultInjector, SimulatedFailure
+from repro.core.plan import as_node
+from repro.launch.metering import StreamStats
+from repro.store import NotStreamable, RelationStore, StreamExecutor
+from repro.store.autotune import ENV_BUDGET
+
+S = ("sites",)
+
+
+def _mesh1():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1,), S)
+
+
+def _rel(seed, key_shape, bound, masked=False):
+    rng = np.random.default_rng(seed)
+    data = np.asarray(rng.normal(size=tuple(key_shape) + tuple(bound)),
+                      np.float32)
+    mask = None
+    if masked:
+        mask = np.ones(key_shape, bool)
+        mask[tuple(0 for _ in key_shape)] = False
+    return TensorRelation(data, RelType(tuple(key_shape), tuple(bound)),
+                          mask)
+
+
+def _matmul_expr(ka=(8, 2), kb=(2, 3), ba=(8, 8), bb=None):
+    a = tra.input("A", key_shape=ka, bound=ba)
+    b = tra.input("B", key_shape=kb, bound=bb or (ba[1], ba[0]))
+    return a @ b
+
+
+ORACLE = Engine(executor="reference", optimize=False, fuse=False)
+
+
+def _np(res):
+    return res.to_numpy() if hasattr(res, "to_numpy") \
+        else np.asarray(res.data)
+
+
+# ==========================================================================
+# Property sweep: chunk sizes × executors, streamed == resident at 1e-5
+# ==========================================================================
+
+@pytest.mark.parametrize("executor", ["reference", "jit", "gspmd",
+                                      "shard_map"])
+@pytest.mark.parametrize("chunk_keys", [1, 3, 8])
+def test_stream_out_matches_every_executor(executor, chunk_keys):
+    e = _matmul_expr()
+    RA, RB = _rel(0, (8, 2), (8, 8)), _rel(1, (2, 3), (8, 8))
+    mesh = _mesh1() if executor in ("gspmd", "shard_map") else None
+    resident = Engine(mesh, executor=executor).run(e, A=RA, B=RB)
+    # force-planned streaming through a host engine, every chunk size
+    eng = Engine(executor="jit")
+    se = StreamExecutor(eng, budget=1 << 30)
+    sp = se.plan(e, force=True, chunk_keys=chunk_keys)
+    assert sp.mode == "stream-out" and sp.chunk_keys == chunk_keys
+    stats = StreamStats()
+    got = se.execute(sp, {"A": RA, "B": RB}, stats)
+    np.testing.assert_allclose(_np(got), _np(resident),
+                               atol=1e-5, rtol=1e-5)
+    assert stats.chunks == sp.nchunks == -(-8 // chunk_keys)
+
+
+@pytest.mark.parametrize("chunk_keys", [1, 2, 4, 8])
+def test_stream_reduce_matches_oracle(chunk_keys):
+    # out key grid is 1×1 → no stream-out axis; the contracted join dim
+    # (8 key blocks) streams through the associative Σ∘⋈ fold instead
+    e = _matmul_expr(ka=(1, 8), kb=(8, 1))
+    RA, RB = _rel(2, (1, 8), (8, 8)), _rel(3, (8, 1), (8, 8))
+    want = ORACLE.run(e, A=RA, B=RB)
+    se = StreamExecutor(Engine(executor="jit"), budget=1 << 30)
+    sp = se.plan(e, force=True, chunk_keys=chunk_keys)
+    assert sp.mode == "stream-reduce"
+    stats = StreamStats()
+    got = se.execute(sp, {"A": RA, "B": RB}, stats)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-4, rtol=1e-4)
+    assert stats.mode == "stream-reduce"
+    assert stats.chunks == -(-8 // chunk_keys)
+
+
+@pytest.mark.parametrize("executor", ["reference", "jit"])
+def test_masked_inputs_fall_back_resident(executor):
+    # budget small enough that the unmasked plan WOULD stream — the
+    # masked runtime value must force the resident path at execute time
+    e = _matmul_expr(ka=(64, 2), kb=(2, 1), ba=(32, 16), bb=(16, 16))
+    RA = _rel(4, (64, 2), (32, 16), masked=True)
+    RB = _rel(5, (2, 1), (16, 16))
+    want = ORACLE.run(e, A=RA, B=RB)
+    eng = Engine(executor=executor, memory_budget=64 * 1024)
+    if executor == "jit":
+        # same contract as without a budget: staged executors reject
+        # masked inputs — the budget must not smuggle them through
+        with pytest.raises(NotImplementedError, match="mask"):
+            eng.run(e, A=RA, B=RB)
+        return
+    got = eng.run(e, A=RA, B=RB)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-5, rtol=1e-5)
+    # the artifact streamed nothing: masked values ran the resident path
+    stats = [c.stream_stats for c in eng.cache_info() if c.stream_stats]
+    assert stats and stats[0].mode == "resident"
+
+
+def test_masked_plan_type_refuses_force_streaming():
+    a = tra.input("A", key_shape=(8, 2), bound=(4, 4))
+    e = a.filter(lambda k: k[0] < 6) @ tra.input("B", key_shape=(2, 2),
+                                                 bound=(4, 4))
+    se = StreamExecutor(Engine(executor="reference"), budget=1)
+    with pytest.raises(NotStreamable, match="continuous"):
+        se.plan(e, force=True)
+
+
+# ==========================================================================
+# Engine(memory_budget=...): over-budget plans stream, bounded live set
+# ==========================================================================
+
+def test_over_budget_contraction_streams_under_budget():
+    # A is 8·32·16·4 B = 512 KiB ≥ 4× the 64 KiB budget
+    e = _matmul_expr(ka=(64, 2), kb=(2, 1), ba=(32, 16), bb=(16, 16))
+    RA, RB = _rel(6, (64, 2), (32, 16)), _rel(7, (2, 1), (16, 16))
+    want = ORACLE.run(e, A=RA, B=RB)
+    budget = 64 * 1024
+    assert RA.data.nbytes >= 4 * budget
+    eng = Engine(executor="jit", memory_budget=budget)
+    got = eng.run(e, A=RA, B=RB)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-5, rtol=1e-5)
+    stats = [c.stream_stats for c in eng.cache_info() if c.stream_stats]
+    assert len(stats) == 1 and stats[0].mode == "stream-out"
+    assert stats[0].chunks > 1
+    assert 0 < stats[0].peak_device_bytes <= budget
+    # second run of the same expression is a pure cache hit
+    hits0 = eng.cache_hits
+    eng.run(e, A=RA, B=RB)
+    assert eng.cache_hits > hits0
+    assert stats[0].runs == 2
+
+
+def test_chained_two_matmul_zero_rematerialization():
+    # (A·B)·C with A = 512 KiB ≥ 4× the 64 KiB budget: the intermediate
+    # A·B (256 KiB) must never materialize whole on device either
+    a = tra.input("A", key_shape=(64, 2), bound=(32, 16))
+    b = tra.input("B", key_shape=(2, 2), bound=(16, 8))
+    c = tra.input("C", key_shape=(2, 1), bound=(8, 8))
+    e = (a @ b) @ c
+    RA = _rel(8, (64, 2), (32, 16))
+    RB = _rel(9, (2, 2), (16, 8))
+    RC = _rel(10, (2, 1), (8, 8))
+    want = ORACLE.run(e, A=RA, B=RB, C=RC)
+    budget = 64 * 1024
+    assert RA.data.nbytes >= 4 * budget
+    eng = Engine(executor="jit", memory_budget=budget)
+    got = eng.run(e, A=RA, B=RB, C=RC)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-4, rtol=1e-4)
+    (stats,) = [s.stream_stats for s in eng.cache_info() if s.stream_stats]
+    assert stats.mode == "stream-out" and stats.chunks > 1
+    assert stats.peak_device_bytes <= budget
+
+
+def test_store_backed_inputs_stream_with_h2d_accounting():
+    e = _matmul_expr(ka=(64, 1), kb=(1, 1), ba=(32, 16), bb=(16, 16))
+    RA, RB = _rel(11, (64, 1), (32, 16)), _rel(12, (1, 1), (16, 16))
+    want = ORACLE.run(e, A=RA, B=RB)
+    store = RelationStore()
+    eng = Engine(executor="jit", memory_budget=64 * 1024, store=store)
+    got = eng.run(e, A=store.put("A", RA), B=RB)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-5, rtol=1e-5)
+    (stats,) = [s.stream_stats for s in eng.cache_info() if s.stream_stats]
+    # every A chunk crossed host→device exactly once
+    assert stats.h2d_bytes >= RA.data.nbytes
+
+
+def test_under_budget_plan_runs_resident():
+    e = _matmul_expr()
+    RA, RB = _rel(0, (8, 2), (8, 8)), _rel(1, (2, 3), (8, 8))
+    eng = Engine(executor="jit", memory_budget=1 << 30)
+    got = eng.run(e, A=RA, B=RB)
+    np.testing.assert_allclose(_np(got), _np(ORACLE.run(e, A=RA, B=RB)),
+                               atol=1e-5, rtol=1e-5)
+    stats = [s.stream_stats for s in eng.cache_info() if s.stream_stats]
+    assert stats and stats[0].mode == "resident"
+
+
+# ==========================================================================
+# Fault injection over store-backed runs
+# ==========================================================================
+
+@pytest.mark.faults
+def test_oom_ladder_recovers_via_store_streaming_first(monkeypatch):
+    # byte-accurate device model: the resident contraction (~512 KiB
+    # live) OOMs; streamed key-range chunks (≤ ~64 KiB live) fit.  The
+    # env override pins rung 1's autotuned budget to 64 KiB.
+    ok_bytes = 96 * 1024
+    monkeypatch.setenv(ENV_BUDGET, str(4 * 64 * 1024))
+    # reduce dim 4 → the optimizer selects the fused Σ∘⋈ contraction,
+    # whose on_contraction hook enforces the injected byte budget
+    e = _matmul_expr(ka=(64, 4), kb=(4, 1), ba=(32, 16), bb=(16, 16))
+    RA, RB = _rel(13, (64, 4), (32, 16)), _rel(14, (4, 1), (16, 16))
+    want = ORACLE.run(e, A=RA, B=RB)
+    inj = FaultInjector().inject_oom(ok_bytes=ok_bytes)
+    eng = Engine(executor="jit", fault_injector=inj, degrade=True)
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        got = eng.run(e, A=RA, B=RB)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-5, rtol=1e-5)
+    msgs = [str(w.message) for w in wlog]
+    assert any("host relation store" in m for m in msgs)
+    # rung 1 sufficed — the halving-chunk ladder never started
+    assert not any("halving" in m for m in msgs)
+    ooms = [d for k, d in inj.log if k == "oom"]
+    assert ooms and any("unstreamed" in d for d in ooms)
+    # the degraded streamed artifact is cached under its own key, so the
+    # resident artifact (which would OOM again) is never shadowed
+    streamed = [c for c in eng.cache_info() if c.stream_stats]
+    assert streamed and streamed[0].signature[0] == "streamed"
+
+
+@pytest.mark.faults
+def test_oom_without_degrade_propagates_through_budget_mode():
+    from repro.core.faults import DeviceOOM
+    e = _matmul_expr(ka=(8, 3), kb=(3, 5))
+    RA, RB = _rel(0, (8, 3), (8, 8)), _rel(1, (3, 5), (8, 8))
+    inj = FaultInjector().inject_oom(ok_bytes=1)
+    eng = Engine(executor="jit", fault_injector=inj, degrade=False)
+    with pytest.raises(DeviceOOM):
+        eng.run(e, A=RA, B=RB)
+
+
+@pytest.mark.faults
+def test_kill_mid_stream_then_clean_retry():
+    e = _matmul_expr(ka=(64, 2), kb=(2, 1), ba=(32, 16), bb=(16, 16))
+    RA, RB = _rel(15, (64, 2), (32, 16)), _rel(16, (2, 1), (16, 16))
+    want = ORACLE.run(e, A=RA, B=RB)
+    # the second chunk program dispatch dies — mid-stream, after chunk 0
+    # already ran (and possibly appended partial output to the store)
+    inj = FaultInjector().inject_site_failure(step=1, times=1)
+    eng = Engine(executor="jit", memory_budget=64 * 1024,
+                 fault_injector=inj)
+    with pytest.raises(SimulatedFailure):
+        eng.run(e, A=RA, B=RB)
+    (stats,) = [s.stream_stats for s in eng.cache_info() if s.stream_stats]
+    assert 0 < stats.chunks < stats.runs + 64   # died partway
+    # retry: the fault budget is spent; the store-backed rerun replaces
+    # any partial output and completes bit-compatibly
+    got = eng.run(e, A=RA, B=RB)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-5, rtol=1e-5)
+    assert stats.runs == 2
+
+
+@pytest.mark.faults
+def test_spilling_store_still_streams_correctly(tmp_path):
+    # host tier under pressure: the store spills blocks to disk while the
+    # plan streams — results unchanged, spill counters surfaced
+    e = _matmul_expr(ka=(64, 1), kb=(1, 1), ba=(32, 16), bb=(16, 16))
+    RA, RB = _rel(17, (64, 1), (32, 16)), _rel(18, (1, 1), (16, 16))
+    want = ORACLE.run(e, A=RA, B=RB)
+    blk = 8 * 32 * 16 * 4
+    store = RelationStore(ram_limit_bytes=2 * blk, spill_dir=str(tmp_path),
+                          block_bytes=blk)
+    eng = Engine(executor="jit", memory_budget=64 * 1024, store=store)
+    got = eng.run(e, A=store.put("A", RA), B=RB)
+    np.testing.assert_allclose(_np(got), _np(want), atol=1e-5, rtol=1e-5)
+    (stats,) = [s.stream_stats for s in eng.cache_info() if s.stream_stats]
+    assert stats.spill_events > 0

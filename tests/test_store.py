@@ -1,0 +1,219 @@
+"""The host relation store tier (``repro.store``): blocks, spill, config.
+
+Covers the out-of-core tentpole's storage layer in isolation:
+
+* ``RelationStore.put``/``get``/``slice`` round-trips across block
+  boundaries, and ``create``+``append`` grows the key frontier the way a
+  streamed plan writes outputs back;
+* the LRU disk-spill tier under ``ram_limit_bytes`` (spilled blocks fault
+  back in transparently, counters feed ``StreamStats``);
+* ``HostRelation`` handles are accepted by ``Engine.run`` everywhere a
+  relation is — materialized resident when no budget applies;
+* the ``chunk="auto"`` autotune ladder (env override → device stats →
+  static default) and the engine-level ``chunk``/``memory_budget``
+  validation;
+* ``plan_peak_bytes``, the compile-time live-set estimator the streaming
+  planner budgets against.
+"""
+import numpy as np
+import pytest
+
+import repro.core as tra
+from repro.core import Engine, RelType, TensorRelation, from_tensor
+from repro.core.cost import plan_peak_bytes
+from repro.core.plan import as_node
+from repro.store import (DEFAULT_BLOCK_BYTES, HostRelation, RelationStore,
+                         StoreError, chunk_slices, device_memory_budget,
+                         stream_budget_bytes)
+from repro.store.autotune import ENV_BUDGET
+
+
+def _rel(seed, key_shape, bound):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=tuple(key_shape) + tuple(bound))
+    return from_tensor(
+        np.asarray(data, np.float32).reshape(
+            tuple(k * b for k, b in zip(key_shape, bound))),
+        tuple(bound))
+
+
+# ==========================================================================
+# Blocks: put / slice / append round-trips
+# ==========================================================================
+
+def test_put_get_slice_roundtrip_across_blocks():
+    R = _rel(0, (16, 2), (8, 4))
+    # tiny block target → the 16-key relation splits into many blocks
+    store = RelationStore(block_bytes=3 * 2 * 8 * 4 * 4)
+    hr = store.put("R", R)
+    assert store.get("R") is hr and "R" in store
+    assert hr.complete and hr.nkeys == 16
+    assert len(hr._blocks) > 3          # actually chunked
+    full = np.asarray(R.data)
+    np.testing.assert_array_equal(hr.to_numpy(), full)
+    for lo, hi in [(0, 1), (2, 7), (5, 16), (15, 16)]:
+        np.testing.assert_array_equal(hr.slice(lo, hi), full[lo:hi])
+
+
+def test_create_append_frontier_and_errors():
+    rt = RelType((6, 2), (4, 4), np.float32)
+    store = RelationStore()
+    hr = store.create("O", rt)
+    assert hr.frontier == 0 and not hr.complete
+    data = np.arange(6 * 2 * 4 * 4, dtype=np.float32).reshape(6, 2, 4, 4)
+    hr.append(data[:2])
+    hr.append(data[2:5])
+    assert hr.frontier == 5 and not hr.complete
+    with pytest.raises(StoreError, match="incomplete"):
+        hr.to_numpy()
+    with pytest.raises(StoreError, match="exceeds"):
+        hr.append(data[:2])             # 5 + 2 > 6 keys
+    with pytest.raises(StoreError, match="shape"):
+        hr.append(np.zeros((1, 3, 4, 4), np.float32))
+    hr.append(data[5:6])
+    assert hr.complete
+    np.testing.assert_array_equal(hr.to_numpy(), data)
+    # create() under the same name replaces the old relation
+    hr2 = store.create("O", rt)
+    assert store.get("O") is hr2 and hr2.frontier == 0
+
+
+def test_put_raw_array_requires_rtype():
+    store = RelationStore()
+    with pytest.raises(StoreError, match="rtype"):
+        store.put("X", np.zeros((2, 2, 4, 4), np.float32))
+    rt = RelType((2, 2), (4, 4), np.float32)
+    hr = store.put("X", np.zeros((2, 2, 4, 4), np.float32), rtype=rt)
+    assert hr.complete
+    with pytest.raises(StoreError, match="dense"):
+        store.put("Y", np.zeros((3, 2, 4, 4), np.float32), rtype=rt)
+
+
+# ==========================================================================
+# Disk spill tier (LRU, transparent fault-in)
+# ==========================================================================
+
+def test_spill_and_faultin_roundtrip(tmp_path):
+    R = _rel(1, (16, 1), (8, 8))
+    blk = 2 * 1 * 8 * 8 * 4             # 2 keys per block
+    store = RelationStore(ram_limit_bytes=3 * blk, spill_dir=str(tmp_path),
+                          block_bytes=blk)
+    hr = store.put("R", R)
+    assert store.spill_events > 0       # the 16-key put exceeded 3 blocks
+    assert store.ram_bytes <= 3 * blk
+    spilled = [b for b in hr._blocks if b.data is None]
+    assert spilled and all(b.path for b in spilled)
+    # reads fault spilled blocks back in (and stay under the limit)
+    np.testing.assert_array_equal(hr.to_numpy(), np.asarray(R.data))
+    assert store.unspill_events > 0
+    assert store.ram_bytes <= 3 * blk
+    store.delete("R")
+    assert store.ram_bytes == 0 and "R" not in store
+
+
+def test_no_limit_never_spills():
+    store = RelationStore()
+    store.put("R", _rel(2, (8, 1), (8, 8)))
+    assert store.spill_events == 0 and store.ram_bytes > 0
+
+
+# ==========================================================================
+# HostRelation handles through Engine.run (resident materialization)
+# ==========================================================================
+
+@pytest.mark.parametrize("executor", ["reference", "jit"])
+def test_host_relation_accepted_by_engine_run(executor):
+    a = tra.input("A", key_shape=(4, 2), bound=(4, 4))
+    b = tra.input("B", key_shape=(2, 3), bound=(4, 4))
+    e = a @ b
+    RA, RB = _rel(3, (4, 2), (4, 4)), _rel(4, (2, 3), (4, 4))
+    want = Engine(executor="reference", optimize=False).run(e, A=RA, B=RB)
+    store = RelationStore()
+    eng = Engine(executor=executor)
+    got = eng.run(e, A=store.put("A", RA), B=RB)
+    np.testing.assert_allclose(np.asarray(got.data), np.asarray(want.data),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_host_relation_type_mismatch_rejected():
+    a = tra.input("A", key_shape=(4, 2), bound=(4, 4))
+    b = tra.input("B", key_shape=(2, 3), bound=(4, 4))
+    store = RelationStore()
+    wrong = store.put("A", _rel(5, (2, 3), (4, 4)))
+    with pytest.raises(ValueError, match="host relation type"):
+        Engine(executor="jit").run(a @ b, A=wrong,
+                                   B=_rel(4, (2, 3), (4, 4)))
+
+
+# ==========================================================================
+# Autotune ladder + engine configuration validation
+# ==========================================================================
+
+def test_device_budget_env_override(monkeypatch):
+    monkeypatch.setenv(ENV_BUDGET, str(123 * 1024 * 1024))
+    assert device_memory_budget() == 123 * 1024 * 1024
+    # stream budget applies the safety fraction to the device budget
+    assert 0 < stream_budget_bytes() < 123 * 1024 * 1024
+    monkeypatch.delenv(ENV_BUDGET)
+    # explicit budgets pass through unscaled
+    assert stream_budget_bytes(4096) == 4096
+
+
+def test_chunk_slices_solves_budget():
+    # budget 1000B, 2×100B double-buffered outputs → 800B over 50B slices
+    assert chunk_slices(50, 100, 1000) == 16
+    assert chunk_slices(10 ** 9, 10 ** 9, 1000) == 1   # never below 1
+
+
+def test_engine_chunk_auto_matches_static_default():
+    a = tra.input("A", key_shape=(2, 4), bound=(4, 4))
+    b = tra.input("B", key_shape=(4, 2), bound=(4, 4))
+    # elemMax agg over a join → the chunked streaming fused path, where
+    # the chunk size is the knob "auto" tunes
+    e = a.join(b, on=((1,), (0,)), kernel="elemMul").agg((0, 2), "elemMax")
+    RA, RB = _rel(6, (2, 4), (4, 4)), _rel(7, (4, 2), (4, 4))
+    want = Engine(executor="reference", optimize=False,
+                  fuse=False).run(e, A=RA, B=RB)
+    for chunk in ("auto", None, 2):
+        got = Engine(executor="jit", chunk=chunk).run(e, A=RA, B=RB)
+        np.testing.assert_allclose(np.asarray(got.data),
+                                   np.asarray(want.data),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="chunk"):
+        Engine(chunk="bogus")
+    with pytest.raises(ValueError, match="chunk must be >= 1"):
+        Engine(chunk=0)
+    with pytest.raises(ValueError, match="chunk must be >= 1"):
+        Engine().compile(tra.input("A", (2, 2), (2, 2)) @
+                         tra.input("B", (2, 2), (2, 2)), chunk=0)
+    with pytest.raises(ValueError, match="memory_budget"):
+        Engine(memory_budget=0)
+    # the engine-owned store is lazy and sticky
+    eng = Engine()
+    assert eng.store is eng.store
+    mine = RelationStore()
+    assert Engine(store=mine).store is mine
+
+
+# ==========================================================================
+# plan_peak_bytes: the live-set estimator the planner budgets against
+# ==========================================================================
+
+def test_plan_peak_bytes_scales_with_shapes_and_counts_fusion():
+    def matmul(nk):
+        a = tra.input("A", key_shape=(nk, 2), bound=(8, 8))
+        b = tra.input("B", key_shape=(2, 2), bound=(8, 8))
+        return as_node(a @ b)
+
+    small, big = plan_peak_bytes(matmul(2)), plan_peak_bytes(matmul(64))
+    assert big > small > 0
+    # operands alone are a lower bound on the live set
+    floats = (64 * 2 + 2 * 2) * 8 * 8
+    assert big >= floats * 4
+    # the fused (streamed) contraction never materializes the full join
+    # product, so its peak is below the unfused walk's
+    assert plan_peak_bytes(matmul(64), fuse=True) <= \
+        plan_peak_bytes(matmul(64), fuse=False)
