@@ -1,0 +1,151 @@
+"""Static-verifier overhead: strict validation on the compile path.
+
+``Engine(validate="strict")`` runs the per-compile verifier passes
+(placement, collectives, streaming, memory — see ``repro.analysis``) on
+every compile-cache miss.  The pitch of compile-time verification is
+that it is *free at runtime and cheap at compile time*; this benchmark
+backs the second half with a number and a guard:
+
+* **first-step wall** — the §5.3 FFNN train step through a fresh
+  ``Engine(executor="jit")`` per measurement, timed from cold
+  ``TraTrainer.step`` to ``block_until_ready`` (TRA lowering + JAX trace
+  + XLA compile + one execution), with ``validate="off"`` vs
+  ``validate="strict"``.  Guard: strict adds less than
+  ``ANALYSIS_OVERHEAD_MAX`` (5 %);
+* **verifier-only wall** — ``verify_plans`` on the same program in
+  isolation, so the report separates "what the passes cost" from
+  "what the compile costs".
+
+Emits ``BENCH_analysis.json`` next to the repo root and raises on guard
+failure — wired into ``benchmarks/run.py`` and the CI smoke step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from typing import Dict, List
+
+# §5.3 FFNN sized so XLA compile + the O(n³) contractions dominate (same
+# dims as benchmarks/robustness.py): the verifier is O(plan nodes) and
+# must vanish against a real compile, not against a toy one
+DIMS = (8, 16, 16, 2, 128, 64, 64, 32)   # nb db hb lb bn bd bh bl
+REPS = 5
+SMOKE_REPS = 2
+ANALYSIS_OVERHEAD_MAX = 0.05             # strict ≤ 1.05× off
+
+
+def _build(dims):
+    import jax
+
+    from repro.core import from_tensor
+    from repro.core.programs import ffnn_train_step_tra
+
+    nb, db, hb, lb, bn, bd, bh, bl = dims
+    N, D, H, L = nb * bn, db * bd, hb * bh, lb * bl
+    X = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    Wt = jax.random.normal(jax.random.PRNGKey(4), (D, L)) * 0.5
+    Y = jax.nn.sigmoid(X @ Wt)
+    W1 = jax.random.normal(jax.random.PRNGKey(2), (D, H)) * (D ** -0.5)
+    W2 = jax.random.normal(jax.random.PRNGKey(3), (H, L)) * (H ** -0.5)
+    step = ffnn_train_step_tra(*dims)
+    data = dict(X=from_tensor(X, (bn, bd)), Y=from_tensor(Y, (bn, bl)))
+    params = dict(W1=from_tensor(W1, (bd, bh)),
+                  W2=from_tensor(W2, (bh, bl)))
+    return step, data, params
+
+
+def _first_step_ms(step, data, params, mode: str) -> float:
+    """Cold compile+execute wall through a fresh engine and trainer.
+
+    A fresh ``Engine`` per call keeps both the engine compile cache and
+    the jit cache cold (the compiled callable is a new closure), so each
+    measurement pays the full trace + XLA compile the verifier rides on.
+    """
+    import jax
+
+    from repro.core import TraTrainer
+    from repro.core.engine import Engine
+
+    eng = Engine(executor="jit", optimize=False, validate=mode)
+    trainer = TraTrainer(eng, step, params=params)
+    t0 = time.perf_counter()
+    trainer.step(**data)
+    jax.block_until_ready(trainer.params["W1"].data)
+    return (time.perf_counter() - t0) * 1e3
+
+
+def bench_compile_overhead(reps: int = REPS) -> Dict:
+    from repro.analysis import verify_plans
+
+    step, data, params = _build(DIMS)
+    roots = tuple(step.roots.values())
+
+    # one throwaway compile to pay process-wide warm-up (jax backend
+    # init, module imports) outside every timed measurement
+    _first_step_ms(step, data, params, "off")
+
+    rec: Dict = {"reps": reps}
+    for mode in ("off", "strict"):
+        walls = sorted(_first_step_ms(step, data, params, mode)
+                       for _ in range(reps))
+        # best-of-N: scheduler and XLA-thread noise only ever adds time
+        rec[f"{mode}_compile_ms"] = round(walls[0], 2)
+    rec["overhead"] = round(
+        rec["strict_compile_ms"] / max(rec["off_compile_ms"], 1e-9) - 1.0,
+        4)
+
+    verify_walls = []
+    n_diags = 0
+    for _ in range(max(reps, 3)):
+        t0 = time.perf_counter()
+        diags = verify_plans(roots, executor="jit")
+        verify_walls.append((time.perf_counter() - t0) * 1e3)
+        n_diags = len(diags)
+    rec["verifier_only_ms"] = round(statistics.median(verify_walls), 3)
+    rec["verifier_diagnostics"] = n_diags
+    rec["verifier_errors"] = len(diags.errors)
+    return rec
+
+
+def run(mesh=None, smoke: bool = False) -> List[str]:
+    rec = bench_compile_overhead(SMOKE_REPS if smoke else REPS)
+    out = {"dims": list(DIMS), "compile": rec,
+           "analysis_overhead_max": ANALYSIS_OVERHEAD_MAX}
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_analysis.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+
+    lines = ["# static verifier overhead (§5.3 FFNN train step, "
+             "cold compile)"]
+    lines.append(
+        f"first step (lower+trace+XLA+run): validate=off "
+        f"{rec['off_compile_ms']:.1f} ms → strict "
+        f"{rec['strict_compile_ms']:.1f} ms "
+        f"({rec['overhead'] * 100:+.2f}%)")
+    lines.append(
+        f"verifier alone (4 compile passes over the train-step plans): "
+        f"{rec['verifier_only_ms']:.2f} ms, "
+        f"{rec['verifier_diagnostics']} diagnostic(s), "
+        f"{rec['verifier_errors']} error(s)")
+
+    ok = (rec["overhead"] <= ANALYSIS_OVERHEAD_MAX
+          and rec["verifier_errors"] == 0)
+    lines.append(
+        f"regression guard (strict compile overhead "
+        f"≤{ANALYSIS_OVERHEAD_MAX * 100:.0f}%, corpus program verifies "
+        f"clean): {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise AssertionError(f"analysis overhead guard failed: {out}")
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer repetitions (CI smoke)")
+    args = ap.parse_args()
+    print("\n".join(run(smoke=args.smoke)))

@@ -18,8 +18,8 @@ def main(argv=None) -> int:
     ap.add_argument("--with-measured", action="store_true")
     args = ap.parse_args(argv)
 
-    from benchmarks import (ffnn, fusion, matmul, nn_search, oocore,
-                            robustness, roofline, serve, train)
+    from benchmarks import (analysis, ffnn, fusion, matmul, nn_search,
+                            oocore, robustness, roofline, serve, train)
 
     sections = [
         ("§5.1 matmul (Tables 3–4)", matmul.run),
@@ -30,6 +30,7 @@ def main(argv=None) -> int:
         ("robustness overheads (BENCH_robust.json)", robustness.run),
         ("serving: continuous batching (BENCH_serve.json)", serve.run),
         ("out-of-core streaming (BENCH_oocore.json)", oocore.run),
+        ("static verifier overhead (BENCH_analysis.json)", analysis.run),
         ("roofline (assignment g)", roofline.run),
     ]
     failures = 0

@@ -1,0 +1,96 @@
+"""Promoted engine input/configuration validation.
+
+The Engine historically carried a handful of ad-hoc inline checks —
+``chunk``/``memory_budget`` range validation at construction,
+unexpected/missing-input rejection and the staged executors' masked-input
+rejection at dispatch.  Those checks now speak the verifier's diagnostic
+vocabulary: each failure is a :class:`~repro.analysis.diagnostics.Diagnostic`
+(pass ``"inputs"``, severity ``error``, a fix-it hint) rendered into the
+raised exception.
+
+Backward compatibility is deliberate: every constructor here raises the
+*same exception type* with the *same leading message text* as the inline
+check it replaces (``ValueError("chunk must be >= 1, ...")``,
+``ValueError("unexpected inputs: ...")``,
+``NotImplementedError("... mask-free ...")``), so existing callers — and
+the test suite — matching on type or substring keep working; the uniform
+diagnostic rendering is appended after the legacy first line.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Type
+
+from repro.analysis.diagnostics import Diagnostic
+
+PASS = "inputs"
+
+
+def _raiseable(exc_type: Type[Exception], message: str, *, hint: str = "",
+               where: str = "Engine") -> Exception:
+    d = Diagnostic(PASS, "error", message, node_label=where, hint=hint)
+    return exc_type(f"{message}\n{d.render()}")
+
+
+def check_chunk(chunk) -> None:
+    """``chunk`` is ``None``, ``"auto"`` or a positive int."""
+    if chunk is None:
+        return
+    if isinstance(chunk, str):
+        if chunk != "auto":
+            raise _raiseable(
+                ValueError,
+                f"chunk must be a positive int, None or \"auto\"; "
+                f"got {chunk!r}",
+                hint="\"auto\" autotunes from the device memory budget",
+                where="Engine(chunk=...)")
+        return
+    if chunk < 1:
+        raise _raiseable(
+            ValueError, f"chunk must be >= 1, got {chunk}",
+            hint="the chunk counts grid slices per streamed reduction "
+                 "step; use \"auto\" to autotune it",
+            where="Engine(chunk=...)")
+
+
+def check_memory_budget(budget) -> None:
+    """``memory_budget`` is ``None`` or a positive byte count."""
+    if budget is not None and budget < 1:
+        raise _raiseable(
+            ValueError,
+            f"memory_budget must be >= 1 byte, got {budget}",
+            hint="pass the device live-bytes budget in bytes, or None "
+                 "to disable the out-of-core tier",
+            where="Engine(memory_budget=...)")
+
+
+def unexpected_inputs_error(unknown: Sequence[str],
+                            expected: Sequence[str]) -> ValueError:
+    return _raiseable(
+        ValueError,
+        f"unexpected inputs: {list(unknown)}; "
+        f"expected {sorted(expected)}",
+        hint="run() takes exactly the plan's declared TraInput/IAInput "
+             "names",
+        where="CompiledExpr.run")
+
+
+def missing_inputs_error(missing: Sequence[str],
+                         expected: Sequence[str]) -> ValueError:
+    return _raiseable(
+        ValueError,
+        f"missing inputs: {list(missing)}; "
+        f"expected {sorted(expected)}",
+        hint="every declared input must be bound by name",
+        where="CompiledExpr.run")
+
+
+def masked_inputs_error(executor: str,
+                        holey: Sequence[str]) -> NotImplementedError:
+    return _raiseable(
+        NotImplementedError,
+        f"executor {executor!r} requires continuous (mask-free) input "
+        f"relations; inputs {list(holey)} carry masks — run on "
+        f"executor=\"reference\", or express the filter inside the plan",
+        hint="staged executors rebuild relations from raw arrays, so an "
+             "input-side static mask would be silently dropped",
+        where="CompiledExpr.run")

@@ -24,12 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
-from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
-                             LocalConcat, LocalFilter, LocalJoin, LocalMap,
-                             LocalTile, Shuf, TypeInfo, _join_types, infer,
-                             postorder)
+from repro.core.plan import (Bcast, FusedJoinAgg, IANode, LocalAgg,
+                             LocalJoin, LocalMap, Shuf, TypeInfo,
+                             _join_types, infer, postorder)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,7 +174,7 @@ def cost_plan(root: IANode, axis_sizes: Dict[str, int],
                 moved = move_floats(child.valid_floats, child.placement,
                                     None, axis_sizes, accounting)
             nc.comm_floats = moved
-            nc.node += f"→ALL"
+            nc.node += "→ALL"
         elif isinstance(n, Shuf):
             child = cache[id(n.child)]
             nc.comm_floats = move_floats(

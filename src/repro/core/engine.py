@@ -42,7 +42,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import warnings
+import weakref
 from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
@@ -71,35 +73,84 @@ DEFAULT_OOM_LADDER_START = 64
 
 
 def _validate_chunk(chunk) -> None:
-    """``chunk`` is ``None``, ``"auto"`` or a positive int."""
-    if chunk is None:
-        return
-    if isinstance(chunk, str):
-        if chunk != "auto":
-            raise ValueError(
-                f"chunk must be a positive int, None or \"auto\"; "
-                f"got {chunk!r}")
-        return
-    if chunk < 1:
-        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    """``chunk`` is ``None``, ``"auto"`` or a positive int.
+
+    The check itself lives with the other promoted input validation in
+    :mod:`repro.analysis.inputs`; it raises the same ``ValueError`` (same
+    leading text) as it always did, now carrying a rendered diagnostic.
+    """
+    from repro.analysis.inputs import check_chunk
+    check_chunk(chunk)
+
+
+VALIDATE_MODES = ("off", "warn", "strict")
 
 
 # ==========================================================================
 # Structural plan signatures (compile-cache keys)
 # ==========================================================================
 
+# id(fn)-only signatures have a fuzzer-found collision class: a kernel
+# rebuilt after its predecessor was garbage-collected can reuse the exact
+# id, and two kernels sharing one `apply` but differing in `out_bound`
+# are distinct semantics under one id.  The content fingerprint below
+# closes both; ids stay in the signature so live distinct objects never
+# need a fingerprint comparison to separate.  Memoized per function
+# *object* (weak keys — a GC'd function drops its entry, so a recycled id
+# can never alias a stale fingerprint).
+_code_fp_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _code_fp(fn) -> str:
+    """Content fingerprint of a callable (bytecode + consts + closure)."""
+    try:
+        return _code_fp_memo[fn]
+    except (KeyError, TypeError):
+        pass
+
+    def feed(h, code):
+        h.update(code.co_code)
+        h.update(repr(code.co_names).encode())
+        for c in code.co_consts:
+            if hasattr(c, "co_code"):
+                feed(h, c)              # nested lambdas/defs: hash content,
+            else:                       # not their repr (which embeds ids)
+                h.update(repr(c).encode())
+
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        # builtins / partials / callables: class + best-effort repr
+        fp = f"{type(fn).__name__}:{getattr(fn, '__name__', repr(fn))}"
+    else:
+        h = hashlib.sha1()
+        feed(h, code)
+        for cell in getattr(fn, "__closure__", None) or ():
+            try:
+                h.update(repr(cell.cell_contents).encode())
+            except Exception:
+                h.update(b"?")
+        fp = h.hexdigest()[:12]
+    try:
+        _code_fp_memo[fn] = fp
+    except TypeError:
+        pass                            # non-weakref-able callable
+    return fp
+
+
 def _kernel_sig(k) -> Tuple:
     # registered kernels are singletons and factory kernels embed their
     # parameters in the name (scaleMul(eta), einsum[...]); the id covers
-    # ad-hoc kernels with colliding names
-    return (k.name, id(k.apply))
+    # ad-hoc kernels with colliding names, the content fingerprints cover
+    # id reuse and shared-apply kernels (see _code_fp)
+    return (k.name, id(k.apply), _code_fp(k.apply), _code_fp(k.out_bound))
 
 
 def _func_sig(tag: str, fn) -> Tuple:
     # user key/bool functions are opaque — the tag plus identity keys them,
     # so structurally rebuilt expressions sharing the function object hit
-    # the cache while different lambdas under a default tag never collide
-    return (tag, id(fn))
+    # the cache while different lambdas under a default tag never collide;
+    # the fingerprint closes the id-reuse-after-GC collision
+    return (tag, id(fn), _code_fp(fn))
 
 
 def plan_sig(node) -> Tuple:
@@ -116,14 +167,19 @@ def plan_sig(node) -> Tuple:
             sig = ("in", n.name, n.rtype.key_shape, n.rtype.bound,
                    str(n.rtype.dtype))
             if isinstance(n, P.IAInput):
+                # dup_kernel is semantics (which reduction the pending
+                # R2-5 partials still owe) — a fuzzer-found collision
+                # when it was absent
                 sig += (n.placement.kind, n.placement.dims,
-                        n.placement.axes, n.placement.dup_axes)
+                        n.placement.axes, n.placement.dup_axes,
+                        n.placement.dup_kernel)
         elif isinstance(n, (P.TraConst, P.IAConst)):
             sig = ("const", n.rtype.key_shape, n.rtype.bound,
                    str(n.rtype.dtype), n.fill)
             if isinstance(n, P.IAConst):
                 sig += (n.placement.kind, n.placement.dims,
-                        n.placement.axes, n.placement.dup_axes)
+                        n.placement.axes, n.placement.dup_axes,
+                        n.placement.dup_kernel)
         elif isinstance(n, (P.TraPad, P.LocalPad)):
             sig = ("pad", rec(n.child), n.key_shape)
         elif isinstance(n, (P.TraJoin, P.LocalJoin)):
@@ -168,7 +224,7 @@ def _placements_sig(placements: Optional[Dict[str, Placement]]) -> Tuple:
     if not placements:
         return ()
     return tuple(sorted(
-        (name, p.kind, p.dims, p.axes, p.dup_axes)
+        (name, p.kind, p.dims, p.axes, p.dup_axes, p.dup_kernel or "")
         for name, p in placements.items()))
 
 
@@ -236,17 +292,20 @@ class CompiledExpr:
     def run(self, **inputs) -> Union[TensorRelation, Tuple]:
         if self.faults is not None:
             self.faults.on_run()
+        # failure paths raise through repro.analysis.inputs (uniform
+        # diagnostics, legacy exception types/text); imports stay off the
+        # happy path
         unknown = [n for n in inputs if n not in self.input_rtypes]
         if unknown:
-            raise ValueError(f"unexpected inputs: {unknown}; "
-                             f"expected {sorted(self.input_rtypes)}")
+            from repro.analysis.inputs import unexpected_inputs_error
+            raise unexpected_inputs_error(unknown, self.input_rtypes)
         env = {name: _coerce(name, val, self.input_rtypes[name],
                              keep_host=self.streamed)
                for name, val in inputs.items()}
         missing = [n for n in self.input_rtypes if n not in env]
         if missing:
-            raise ValueError(f"missing inputs: {missing}; "
-                             f"expected {sorted(self.input_rtypes)}")
+            from repro.analysis.inputs import missing_inputs_error
+            raise missing_inputs_error(missing, self.input_rtypes)
         if self.executor != "reference" and not self.streamed:
             # staged executors rebuild relations from raw arrays inside
             # the compiled artifact, so an input-side static mask would be
@@ -255,11 +314,8 @@ class CompiledExpr:
             # filters are unaffected; they live in the inferred types)
             holey = [n for n, r in env.items() if r.mask is not None]
             if holey:
-                raise NotImplementedError(
-                    f"executor {self.executor!r} requires continuous "
-                    f"(mask-free) input relations; inputs {holey} carry "
-                    f"masks — run on executor=\"reference\", or express "
-                    f"the filter inside the plan")
+                from repro.analysis.inputs import masked_inputs_error
+                raise masked_inputs_error(self.executor, holey)
         outs = self._call(env)
         if self.root_names is not None:
             return dict(zip(self.root_names, outs))
@@ -413,6 +469,19 @@ class Engine:
         ladder, and a failed executor compile falls back ``shard_map/gspmd
         → jit → reference`` with one :class:`RuntimeWarning`.  Off by
         default — without it every failure propagates unchanged.
+    validate:
+        Static plan verification mode (:mod:`repro.analysis`): on every
+        compile-cache miss the post-optimization plans run the verifier
+        passes (placement/exchange soundness, collective consistency,
+        out-of-core streamability, memory-model audit).  ``"warn"``
+        (default) emits one :class:`RuntimeWarning` carrying the rendered
+        error diagnostics; ``"strict"`` raises
+        :class:`repro.analysis.PlanVerificationError` (a ``ValueError``)
+        instead of handing the plan to the executor; ``"off"`` skips
+        verification.  Defaults from the ``REPRO_VALIDATE`` environment
+        variable when unset (CI lints the program corpus under
+        ``strict``).  The last run's findings — errors or not — are kept
+        on ``engine.last_diagnostics``.
     """
 
     def __init__(self, mesh=None, executor: str = "auto",
@@ -428,14 +497,23 @@ class Engine:
                  store=None,
                  fault_injector=None,
                  check_numerics=False,
-                 degrade: bool = False):
+                 degrade: bool = False,
+                 validate: Optional[str] = None):
+        from repro.analysis.inputs import check_memory_budget
         if executor not in EXECUTORS:
             raise ValueError(
                 f"unknown executor {executor!r}; choose from {EXECUTORS}")
         _validate_chunk(chunk)
-        if memory_budget is not None and memory_budget < 1:
+        check_memory_budget(memory_budget)
+        if validate is None:
+            validate = os.environ.get("REPRO_VALIDATE", "warn")
+        if validate not in VALIDATE_MODES:
             raise ValueError(
-                f"memory_budget must be >= 1 byte, got {memory_budget}")
+                f"unknown validate mode {validate!r}; "
+                f"choose from {VALIDATE_MODES}")
+        self.validate = validate
+        # Diagnostics of the most recent verified compile (any severity)
+        self.last_diagnostics = None
         self.mesh = mesh
         self.fault_injector = fault_injector
         self.check_numerics = check_numerics
@@ -664,7 +742,24 @@ class Engine:
             hit.hits += 1
             return hit.compiled
         se = StreamExecutor(self)
-        splan = se.plan(root, force=force)   # may raise NotStreamable
+        try:
+            splan = se.plan(root, force=force)   # may raise NotStreamable
+        except NotStreamable as err:
+            if self.validate == "off":
+                raise
+            # enrich the refusal with the static verifier's per-candidate
+            # provenance diagnostics; the exception TYPE is preserved so
+            # _dispatch's resident fallback (and callers catching
+            # NotStreamable) behave exactly as before
+            from repro.analysis.streaming import explain_unstreamable
+            diags = explain_unstreamable(root, budget=self.memory_budget,
+                                         fuse=self.fuse)
+            self.last_diagnostics = diags
+            if diags.errors:
+                raise NotStreamable(
+                    f"{err}\n{diags.render(min_severity='warning')}"
+                ) from err
+            raise
         self.cache_misses += 1
         stats = StreamStats(mode=splan.mode, budget_bytes=splan.budget)
         out_info = splan.out_info
@@ -893,6 +988,35 @@ class Engine:
             return outs
         return wrapped
 
+    def _verify_compile(self, plans, executor, logical_roots) -> None:
+        """Run the static verifier over the executor-bound plans.
+
+        Called once per compile-cache miss (cache hits re-dispatch
+        already-verified artifacts).  ``"warn"`` surfaces error
+        diagnostics as one RuntimeWarning; ``"strict"`` raises
+        :class:`~repro.analysis.PlanVerificationError` before any
+        executor construction.  All findings (any severity) are kept on
+        ``self.last_diagnostics``.
+        """
+        if self.validate == "off":
+            return
+        from repro.analysis.diagnostics import PlanVerificationError
+        from repro.analysis.manager import verify_plans
+        diags = verify_plans(
+            plans, executor=executor, axis_sizes=self.axis_sizes,
+            memory_budget=self.memory_budget, fuse=self.fuse,
+            logical_roots=logical_roots)
+        self.last_diagnostics = diags
+        if not diags.errors:
+            return
+        if self.validate == "strict":
+            raise PlanVerificationError(diags)
+        warnings.warn(
+            f"plan verification found {len(diags.errors)} error(s) "
+            f"(Engine(validate=\"warn\") — compiling anyway):\n"
+            f"{diags.render(min_severity='warning')}",
+            RuntimeWarning, stacklevel=4)
+
     def _compile(self, roots, placements, target, executor, multi,
                  chunk, stream=False) -> CompiledExpr:
         if self.fault_injector is not None:
@@ -901,6 +1025,7 @@ class Engine:
             if self.mesh is None:
                 raise ValueError(f"executor {executor!r} requires a mesh")
             phys, opts = self._physical_roots(roots, placements, target)
+            self._verify_compile(phys, executor, roots)
             ctx = self._make_ctx(phys, executor, stream)
             out_infos = tuple(infer(p) for p in phys)
             jfn = names = None
@@ -924,6 +1049,7 @@ class Engine:
             plans, opts = self._physical_roots(roots, placements, target)
         else:
             plans, opts = roots, ()
+        self._verify_compile(plans, executor, roots)
         ctx = self._make_ctx(plans, executor, stream)
         out_infos = tuple(infer(p) for p in plans)
         rtypes = _input_nodes(plans)

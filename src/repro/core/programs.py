@@ -14,14 +14,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
-import jax.numpy as jnp
-
 from repro.core import expr as E
 from repro.core.expr import Expr
-from repro.core.kernels_registry import (Kernel, get_kernel, make_scale_mul,
-                                         make_to_val_idx, register)
+from repro.core.kernels_registry import (get_kernel, make_scale_mul,
+                                         make_to_val_idx)
 from repro.core.plan import (Bcast, FusedJoinAgg, IAInput, IANode, LocalAgg,
-                             LocalJoin, Placement, Shuf, TraNode)
+                             LocalJoin, Placement, Shuf)
 from repro.core.tra import RelType
 
 S = ("sites",)

@@ -16,12 +16,11 @@ host-device meshes; the production models use the GSPMD mode.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import tra
 from repro.core.interp import _merge_ia_inputs, _pspec_for, _warn_deprecated

@@ -85,24 +85,35 @@ def _itemsize(rtype) -> int:
 
 
 def _slot_walk(root: TraNode, start: TraNode, start_dim: int,
-               types: Dict[int, TypeInfo]) -> Optional[Dict[int, int]]:
+               types: Dict[int, TypeInfo],
+               reject: Optional[list] = None) -> Optional[Dict[int, int]]:
     """Map ``{id(node): key dim}`` for every node the streamed dim carries
-    through, or None when the plan rejects this dimension."""
+    through, or None when the plan rejects this dimension.
+
+    When ``reject`` is a list, every rejection appends a ``(node,
+    reason)`` pair — the provenance the static verifier's stream-carrier
+    pass (:mod:`repro.analysis.streaming`) renders per candidate dim."""
     sliced: Dict[int, int] = {}
     whole: List[TraNode] = []
     ok = True
+
+    def refuse(n, reason: str) -> None:
+        nonlocal ok
+        ok = False
+        if reject is not None:
+            reject.append((n, reason))
 
     def ka(n) -> int:
         return types[id(n)].rtype.key_arity
 
     def walk(n, d) -> None:
-        nonlocal ok
         if not ok:
             return
         prev = sliced.get(id(n))
         if prev is not None:
             if prev != d:
-                ok = False          # one node, two streamed dims
+                refuse(n, f"needs slicing along two key dims "
+                          f"({prev} and {d}) at once")
             return
         sliced[id(n)] = d
         if isinstance(n, (TraInput, TraConst)):
@@ -129,13 +140,15 @@ def _slot_walk(root: TraNode, start: TraNode, start_dim: int,
             if d < ka(n.child):
                 walk(n.child, d)
             else:
-                ok = False          # the appended tile dim splits arrays
+                refuse(n, "the appended tile dim indexes array tiles, "
+                          "not a sliceable key range")
         elif isinstance(n, TraConcat):
             walk(n.child, d if d < n.key_dim else d + 1)
         else:
             # TraReKey / TraFilter / TraPad: arbitrary key rewrites — a key
             # range of the output has no static preimage range
-            ok = False
+            refuse(n, "arbitrary key rewrite: an output key range has no "
+                      "static preimage range to slice")
 
     walk(start, start_dim)
     if not ok:
@@ -144,20 +157,34 @@ def _slot_walk(root: TraNode, start: TraNode, start_dim: int,
     for w in whole:
         for n in postorder(w):
             whole_ids.add(id(n))
-    if whole_ids & set(sliced):
-        return None                 # same node needed sliced AND whole
+    conflicted = whole_ids & set(sliced)
+    if conflicted:
+        for n in postorder(root):
+            if id(n) in conflicted:
+                refuse(n, "subtree is needed both sliced and whole "
+                          "(it feeds a join side the streamed dim does "
+                          "not reach)")
+                break
+        return None
     name_dim: Dict[str, int] = {}
     for n in postorder(root):
         if isinstance(n, TraInput) and id(n) in sliced:
             d = sliced[id(n)]
             if name_dim.setdefault(n.name, d) != d:
-                return None         # one input, two streamed dims
+                refuse(n, f"input {n.name!r} would have to stream along "
+                          f"two different key dims "
+                          f"({name_dim[n.name]} and {d})")
+                return None
     for n in postorder(root):
         if isinstance(n, TraInput) and id(n) not in sliced \
                 and n.name in name_dim:
-            return None             # same name needed sliced AND whole
+            refuse(n, f"input {n.name!r} is needed both sliced and whole "
+                      f"(it appears in a resident subtree too)")
+            return None
     if not name_dim:
-        return None                 # nothing would actually stream
+        refuse(root, "no input is actually sliced along this dim — "
+                     "nothing would stream")
+        return None
     return sliced
 
 

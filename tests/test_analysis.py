@@ -1,0 +1,505 @@
+"""Static plan verifier: diagnostics, every pass (positive + negative),
+the cache-key fuzzer's regression classes, and the Engine integration.
+
+Each verifier pass gets at least one test where a deliberately corrupted
+plan is rejected with an error diagnostic *naming the offending node*,
+plus one where the corresponding §5 program verifies clean — the
+acceptance bar of the analysis subsystem.
+"""
+import warnings
+
+import pytest
+
+from repro.analysis import (ALL_PASSES, DEFAULT_COMPILE_PASSES, Diagnostic,
+                            Diagnostics, PassManager, PlanVerificationError,
+                            verify_plans)
+from repro.core import programs as prog
+from repro.core.engine import Engine, plan_sig
+from repro.core.kernels_registry import get_kernel
+from repro.core.plan import (Bcast, IAInput, LocalAgg, LocalJoin, Placement,
+                             Shuf, TraReKey, as_node)
+from repro.core.tra import RelType
+
+# §5.1 shapes: key grids divisible by the 4-site mesh
+MM = ((8, 4), (4, 8), (16, 16), (16, 16))
+SITES = {"sites": 4}
+
+
+# ==========================================================================
+# diagnostics vocabulary
+# ==========================================================================
+
+def test_diagnostic_render_snapshot():
+    d = Diagnostic("placement", "error", "the aggregation is wrong",
+                   7, "7:LocalAgg[matAdd]", "use partial=True")
+    assert d.render() == (
+        "[placement] error at node 7:LocalAgg[matAdd]: "
+        "the aggregation is wrong\n"
+        "    hint: use partial=True")
+    # no node, no hint: bare one-liner
+    assert Diagnostic("memory", "info", "fits").render() == \
+        "[memory] info: fits"
+
+
+def test_diagnostics_collection_views_and_render_footer():
+    ds = Diagnostics()
+    ds.add("placement", "error", "bad")
+    ds.add("streaming", "warning", "meh")
+    ds.add("memory", "info", "ok")
+    assert len(ds) == 3 and bool(ds)
+    assert [d.severity for d in ds.errors] == ["error"]
+    assert [d.pass_name for d in ds.by_pass("streaming")] == ["streaming"]
+    out = ds.render(min_severity="warning")
+    assert "bad" in out and "meh" in out and "ok" not in out
+    assert out.endswith("-- 1 error(s), 1 warning(s), 1 info(s)")
+    assert Diagnostics().render() == "no diagnostics"
+
+
+def test_diagnostic_rejects_unknown_severity():
+    with pytest.raises(ValueError, match="severity"):
+        Diagnostic("placement", "fatal", "boom")
+
+
+def test_plan_verification_error_is_value_error_and_carries_diags():
+    ds = Diagnostics()
+    ds.add("placement", "error", "bad")
+    with pytest.raises(ValueError) as ei:
+        ds.raise_if_errors()
+    assert isinstance(ei.value, PlanVerificationError)
+    assert ei.value.diagnostics is ds
+    assert "1 error(s)" in str(ei.value)
+
+
+def test_pass_manager_rejects_unknown_pass():
+    with pytest.raises(ValueError, match="unknown verifier pass"):
+        PassManager(("placement", "no-such-pass"))
+    assert "cachekey" in ALL_PASSES
+    assert "cachekey" not in DEFAULT_COMPILE_PASSES
+
+
+# ==========================================================================
+# placement / exchange soundness
+# ==========================================================================
+
+def test_placement_clean_on_valid_cpmm():
+    diags = verify_plans(prog.cpmm_plan(*MM), executor="shard_map",
+                        axis_sizes=SITES, passes=("placement",))
+    assert not diags.errors
+
+
+def test_placement_rejects_r24_violation_naming_the_node():
+    # bmm_plan reduces away the broadcast-partitioned contraction dim
+    # with partial=False — the R2-4 violation check_valid also rejects
+    diags = verify_plans(prog.bmm_plan(*MM), executor="shard_map",
+                        axis_sizes=SITES, passes=("placement",))
+    assert diags.errors
+    d = diags.errors[0]
+    assert "LocalAgg" in d.node_label and d.node_id >= 0
+    assert "reduces away partitioned key dims" in d.message
+    assert "R2-4" in d.message
+    assert "partial=True" in d.hint
+
+
+def test_placement_downgrades_to_warning_on_host_executors():
+    # the same defect on the site-ignoring jit walk computes correct
+    # values — the plan is merely not distributable as written
+    diags = verify_plans(prog.bmm_plan(*MM), executor="jit",
+                        axis_sizes=SITES, passes=("placement",))
+    assert not diags.errors
+    assert any("reduces away partitioned" in d.message
+               for d in diags.warnings)
+
+
+def test_placement_rejects_unknown_mesh_axis():
+    a = IAInput("A", RelType((4, 4), (8, 8)),
+                Placement.partitioned((0,), ("ghost",)))
+    diags = verify_plans(a, executor="shard_map", axis_sizes=SITES,
+                        passes=("placement",))
+    assert any("mesh axis 'ghost'" in d.message for d in diags.errors)
+
+
+def test_placement_rejects_root_duplicates_off_shard_map():
+    diags = verify_plans(prog.cpmm_fused_plan(*MM), executor="gspmd",
+                        axis_sizes=SITES, passes=("placement",))
+    # cpmm_fused ends in a Shuf that resolves the dups — clean
+    assert not diags.errors
+    # strip the Shuf: the pending partials would be returned as final
+    fused = prog.cpmm_fused_plan(*MM).child
+    diags = verify_plans(fused, executor="gspmd", axis_sizes=SITES,
+                        passes=("placement",))
+    assert any("partial duplicates" in d.message for d in diags.errors)
+
+
+# ==========================================================================
+# collective-consistency (race) detector
+# ==========================================================================
+
+def test_collectives_schedule_of_cpmm_two_phase():
+    from repro.analysis.collectives import collective_schedule
+    sched = collective_schedule(prog.cpmm_two_phase_plan(*MM), SITES)
+    # R2-5 partials resolve via the divisible additive specialization
+    assert [op.kind for op in sched] == ["psum_scatter"]
+    assert sched[0].axis == "sites" and op_named(sched[0], "Shuf")
+
+
+def op_named(op, type_name):
+    return type_name in op.node_label
+
+
+def test_collectives_rejects_unknown_reducer_naming_the_node():
+    a = IAInput("A", RelType((4, 4), (8, 8)),
+                Placement.partitioned((0,), ("x",), dup_axes=("y",),
+                                      dup_kernel="noSuchKernel"))
+    diags = verify_plans(Bcast(a), executor="shard_map",
+                        axis_sizes={"x": 2, "y": 2},
+                        passes=("collectives",))
+    assert any("unknown kernel 'noSuchKernel'" in d.message
+               for d in diags.errors)
+    assert all(d.node_label for d in diags.errors)
+
+
+def test_collectives_rejects_nonassociative_reducer():
+    a = IAInput("A", RelType((4, 4), (8, 8)),
+                Placement.partitioned((0,), ("x",), dup_axes=("y",),
+                                      dup_kernel="matMul"))
+    diags = verify_plans(Bcast(a), executor="shard_map",
+                        axis_sizes={"x": 2, "y": 2},
+                        passes=("collectives",))
+    assert any("non-associative kernel 'matMul'" in d.message
+               for d in diags.errors)
+
+
+def test_collectives_rejects_ghost_axis_exchange():
+    a = IAInput("A", RelType((8, 4), (4, 4)),
+                Placement.partitioned((0,), ("sites",)))
+    root = Shuf(a, (1,), ("ghost",))
+    diags = verify_plans(root, executor="shard_map", axis_sizes=SITES,
+                        passes=("collectives",))
+    assert any("mesh axis 'ghost'" in d.message and "Shuf" in d.node_label
+               for d in diags.errors)
+
+
+def test_collectives_downgraded_on_host_executors():
+    a = IAInput("A", RelType((8, 4), (4, 4)),
+                Placement.partitioned((0,), ("sites",)))
+    root = Shuf(a, (1,), ("ghost",))
+    diags = verify_plans(root, executor="jit", axis_sizes=SITES,
+                        passes=("collectives",))
+    assert not diags.errors
+    assert any("mesh axis 'ghost'" in d.message for d in diags.warnings)
+
+
+def test_site_schedule_alignment_detects_hang_and_divergence():
+    from repro.analysis.collectives import (CollectiveOp,
+                                            check_site_schedules)
+    ag = CollectiveOp("all_gather", "sites", None, 3, "3:Bcast")
+    ar = CollectiveOp("all_reduce", "sites", "matAdd", 5, "5:Shuf")
+    # aligned: clean
+    assert not check_site_schedules([[ag, ar]] * 4).errors
+    # one site short a collective: guaranteed hang
+    diags = check_site_schedules([[ag, ar], [ag]])
+    assert any("blocks forever (hang)" in d.message for d in diags.errors)
+    # same length, different reducer at one position: wrong sums
+    ar2 = CollectiveOp("all_reduce", "sites", "elemMax", 5, "5:Shuf")
+    diags = check_site_schedules([[ag, ar], [ag, ar2]])
+    assert any("diverge at position 1" in d.message for d in diags.errors)
+
+
+# ==========================================================================
+# stream-carrier legality
+# ==========================================================================
+
+def _over_budget_matmul():
+    from repro.core.cost import plan_peak_bytes
+    root = as_node(prog.matmul_tra((8, 2), (2, 2), (16, 16), (16, 16)))
+    return root, int(plan_peak_bytes(root) * 0.6)
+
+
+def test_streaming_legal_plan_gets_info_not_errors():
+    root, budget = _over_budget_matmul()
+    diags = verify_plans(root, executor="jit", memory_budget=budget,
+                        passes=("streaming",))
+    assert not diags.errors
+    assert any("is legal" in d.message for d in diags)
+
+
+def test_streaming_fits_resident_is_info():
+    root, _ = _over_budget_matmul()
+    diags = verify_plans(root, executor="jit", memory_budget=1 << 30,
+                        passes=("streaming",))
+    assert not diags.errors
+    assert any("fits resident" in d.message for d in diags)
+
+
+def test_streaming_rejects_rekey_naming_the_node():
+    root, budget = _over_budget_matmul()
+    rekeyed = TraReKey(root, lambda k: k)
+    diags = verify_plans(rekeyed, executor="jit", memory_budget=budget,
+                        passes=("streaming",))
+    assert diags.errors
+    d = diags.errors[0]
+    assert "TraReKey" in d.node_label
+    assert "rewrites the key space" in d.message
+    assert "resident" in d.hint
+
+
+def test_streaming_silent_without_budget():
+    root, _ = _over_budget_matmul()
+    diags = verify_plans(TraReKey(root, lambda k: k), executor="jit",
+                        passes=("streaming",))
+    assert not len(diags)
+
+
+# ==========================================================================
+# memory-model audit
+# ==========================================================================
+
+def test_memory_model_agrees_on_corpus_programs():
+    from repro.analysis.memory import (audit_memory_model,
+                                       independent_peak_bytes)
+    from repro.core.cost import plan_peak_bytes
+    step = prog.ffnn_train_step_tra(2, 2, 2, 1, 4, 4, 4, 4)
+    roots = tuple(as_node(r) for r in step.roots.values())
+    assert not audit_memory_model(roots).errors
+    assert independent_peak_bytes(roots) == plan_peak_bytes(roots)
+    mm = as_node(prog.matmul_tra(*MM))
+    assert not audit_memory_model(mm).errors
+
+
+def test_memory_model_divergence_is_an_error():
+    from repro.analysis.memory import audit_memory_model
+    root = as_node(prog.matmul_tra(*MM))
+    diags = audit_memory_model(root, estimator=lambda r, fuse=True: 0)
+    msgs = [d.message for d in diags.errors]
+    assert any("memory model divergence" in m and "under-estimate" in m
+               for m in msgs)
+    huge = audit_memory_model(root, estimator=lambda r, fuse=True: 1 << 60)
+    assert any("over-estimate" in d.message for d in huge.errors)
+
+
+def test_memory_model_invariant_largest_relation_names_node(monkeypatch):
+    # the invariants back-stop the case where BOTH liveness walks share a
+    # bug: force agreement on an absurdly small peak and they must fire
+    import repro.analysis.memory as mem
+    root = as_node(prog.matmul_tra(*MM))
+    monkeypatch.setattr(mem, "independent_peak_bytes",
+                        lambda roots, fuse=True: 8)
+    diags = mem.audit_memory_model(root, estimator=lambda r, fuse=True: 8)
+    assert any("largest single relation" in d.message and d.node_label
+               for d in diags.errors)
+    assert any("sum of root outputs" in d.message for d in diags.errors)
+
+
+# ==========================================================================
+# cache-key injectivity fuzzing + plan_sig hardening regressions
+# ==========================================================================
+
+def test_fuzzer_clean_on_hardened_plan_sig():
+    from repro.analysis.cachekey import check_sig_injectivity
+    for build in (lambda: as_node(prog.matmul_tra(*MM)),
+                  lambda: prog.cpmm_fused_plan(*MM),
+                  lambda: prog.bmm_plan(*MM)):
+        assert not check_sig_injectivity(build()).errors
+
+
+def test_fuzzer_finds_out_bound_collision_under_old_kernel_sig(monkeypatch):
+    """Regression: ad-hoc kernels used to sign as (name, id(apply)) —
+    a kernel differing only in out_bound collided."""
+    import repro.core.engine as eng_mod
+    from repro.analysis.cachekey import check_sig_injectivity
+    monkeypatch.setattr(eng_mod, "_kernel_sig",
+                        lambda k: (k.name, id(k.apply)))
+    diags = check_sig_injectivity(prog.cpmm_fused_plan(*MM))
+    assert any("out_bound" in d.message and "collision" in d.message
+               for d in diags.errors)
+    assert all("plan_sig" in d.hint for d in diags.errors)
+
+
+def test_plan_sig_observes_dup_kernel():
+    """Regression: the pending dup reducer was absent from input-placement
+    signatures — two-phase plans differing only in the reducer collided."""
+    rt = RelType((4, 4), (8, 8))
+    mk = lambda red: Bcast(IAInput(
+        "A", rt, Placement.partitioned((0,), ("x",), dup_axes=("y",),
+                                       dup_kernel=red)))
+    assert plan_sig(mk("matAdd")) != plan_sig(mk("elemMax"))
+
+
+def test_plan_sig_observes_out_bound_content():
+    k = get_kernel("matMul")
+    import dataclasses
+    shadow = dataclasses.replace(
+        k, out_bound=lambda *bounds: tuple(k.out_bound(*bounds)))
+    a = IAInput("A", RelType((4, 4), (8, 8)), Placement.replicated())
+    b = IAInput("B", RelType((4, 4), (8, 8)), Placement.replicated())
+    j1 = LocalJoin(a, b, (1,), (0,), k)
+    j2 = LocalJoin(a, b, (1,), (0,), shadow)
+    assert plan_sig(j1) != plan_sig(j2)
+
+
+def test_code_fingerprint_separates_bodies_not_identities():
+    from repro.core.engine import _code_fp
+    f1 = lambda x: x + 1
+    f2 = lambda x: x + 2
+    f3 = lambda x: x + 1
+    assert _code_fp(f1) != _code_fp(f2)
+    # same body, different object: same fingerprint (content-addressed)
+    assert _code_fp(f1) == _code_fp(f3)
+    assert _code_fp(f1) == _code_fp(f1)
+
+
+def test_mutation_enumeration_covers_every_node():
+    from repro.analysis.cachekey import plan_mutations
+    root = prog.cpmm_fused_plan(*MM)
+    muts = list(plan_mutations(root))
+    assert len(muts) >= 6     # inputs ×2+, fused ×3+, shuf ×1
+    # every mutant really is a different tree object than the original
+    assert all(m is not root for _, _, m in muts)
+
+
+def test_fuzz_smoke_randomized_shapes():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.analysis.cachekey import check_sig_injectivity
+
+    @hyp.given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4))
+    @hyp.settings(max_examples=10, deadline=None)
+    def run(fa, fk, fb):
+        root = as_node(prog.matmul_tra((fa, fk), (fk, fb), (4, 4), (4, 4)))
+        assert not check_sig_injectivity(root).errors
+
+    run()
+
+
+# ==========================================================================
+# Engine integration: validate="off" | "warn" | "strict"
+# ==========================================================================
+
+def test_engine_rejects_unknown_validate_mode():
+    with pytest.raises(ValueError, match="unknown validate mode"):
+        Engine(validate="bogus")
+
+
+def test_engine_validate_default_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_VALIDATE", "strict")
+    assert Engine().validate == "strict"
+    monkeypatch.delenv("REPRO_VALIDATE")
+    assert Engine().validate == "warn"
+
+
+def test_engine_strict_rejects_corrupted_plan():
+    root, budget = _over_budget_matmul()
+    eng = Engine(executor="jit", memory_budget=budget, validate="strict")
+    with pytest.raises(PlanVerificationError) as ei:
+        eng.compile(TraReKey(root, lambda k: k))
+    assert "TraReKey" in str(ei.value)
+    assert ei.value.diagnostics.errors
+    assert eng.last_diagnostics is ei.value.diagnostics
+
+
+def test_engine_warn_compiles_anyway_with_runtime_warning():
+    root, budget = _over_budget_matmul()
+    eng = Engine(executor="jit", memory_budget=budget, validate="warn")
+    with pytest.warns(RuntimeWarning, match="plan verification found"):
+        eng.compile(TraReKey(root, lambda k: k))
+    assert eng.last_diagnostics is not None
+    assert eng.last_diagnostics.errors
+
+
+def test_engine_off_is_silent():
+    root, budget = _over_budget_matmul()
+    eng = Engine(executor="jit", memory_budget=budget, validate="off")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.compile(TraReKey(root, lambda k: k))
+    assert eng.last_diagnostics is None
+
+
+def test_engine_strict_accepts_clean_programs_and_records_diags():
+    eng = Engine(executor="jit", validate="strict")
+    step = prog.ffnn_train_step_tra(2, 2, 2, 1, 4, 4, 4, 4)
+    eng.compile(step.roots)
+    assert eng.last_diagnostics is not None
+    assert not eng.last_diagnostics.errors
+
+
+def test_verify_runs_once_per_cache_miss():
+    root = as_node(prog.matmul_tra(*MM))
+    eng = Engine(executor="jit", validate="strict")
+    eng.compile(root)
+    first = eng.last_diagnostics
+    eng.compile(root)                # cache hit: no re-verification
+    assert eng.last_diagnostics is first
+
+
+def test_streamed_refusal_enriched_with_diagnostics():
+    from repro.store.stream import NotStreamable
+    root, budget = _over_budget_matmul()
+    # force=True is the degradation ladder's rung-1 path — the one place
+    # StreamExecutor.plan raises instead of silently planning resident
+    eng = Engine(executor="jit", memory_budget=budget, validate="warn")
+    with pytest.raises(NotStreamable) as ei:
+        eng._compile_streamed(TraReKey(root, lambda k: k), force=True)
+    assert "[streaming]" in str(ei.value)
+    assert "rewrites the key space" in str(ei.value)
+    # validate="off": the bare legacy refusal, no verifier text
+    eng_off = Engine(executor="jit", memory_budget=budget, validate="off")
+    with pytest.raises(NotStreamable) as ei:
+        eng_off._compile_streamed(TraReKey(root, lambda k: k), force=True)
+    assert "[streaming]" not in str(ei.value)
+
+
+# ==========================================================================
+# promoted legacy validation: same types, same leading text
+# ==========================================================================
+
+def test_chunk_validation_keeps_legacy_text_and_adds_diagnostic():
+    with pytest.raises(ValueError, match="chunk must be >= 1, got 0") as ei:
+        Engine(chunk=0)
+    assert "[inputs] error" in str(ei.value)
+    with pytest.raises(ValueError, match="positive int, None or \"auto\""):
+        Engine(chunk="bogus")
+
+
+def test_memory_budget_validation():
+    with pytest.raises(ValueError,
+                       match="memory_budget must be >= 1 byte") as ei:
+        Engine(memory_budget=0)
+    assert "[inputs] error" in str(ei.value)
+
+
+def test_run_input_validation_keeps_legacy_text():
+    import numpy as np
+    ce = Engine(executor="reference").compile(
+        prog.matmul_tra((2, 2), (2, 2), (4, 4), (4, 4)))
+    A = np.ones((2, 2, 4, 4), dtype="float32")
+    with pytest.raises(ValueError, match="unexpected inputs") as ei:
+        ce.run(A=A, B=A, C=A)
+    assert "[inputs] error" in str(ei.value)
+    with pytest.raises(ValueError, match="missing inputs"):
+        ce.run(A=A)
+
+
+def test_masked_inputs_error_constructor():
+    from repro.analysis.inputs import masked_inputs_error
+    err = masked_inputs_error("jit", ["A"])
+    assert isinstance(err, NotImplementedError)
+    assert "requires continuous (mask-free) input relations" in str(err)
+    assert "['A']" in str(err)
+
+
+# ==========================================================================
+# the program corpus verifies clean under every pass
+# ==========================================================================
+
+def test_corpus_clean_under_all_passes():
+    from repro.analysis.lint import _corpus
+    for name, build in _corpus():
+        diags = verify_plans(passes=ALL_PASSES, **build())
+        assert not diags.errors, (
+            f"{name}: {[d.render() for d in diags.errors]}")
+
+
+def test_lint_cli_exits_zero():
+    from repro.analysis.lint import main
+    assert main(["-q"]) == 0
