@@ -1,0 +1,276 @@
+"""Serving resilience benchmark: chaos load against the SLO guards.
+
+Drives :class:`~repro.serve.server.TraServer` through the PR-6 fault
+model under load and guards the numbers that make the resilience layer
+worth having:
+
+* **decode chaos** — the smoke recurrent LM under a Poisson open-loop
+  stream while a :func:`~repro.serve.loadgen.chaos_injector` schedule
+  fires periodic site failures, NaN poisonings (caught by
+  ``check_numerics``), and device OOMs.  Runs on the ``reference``
+  executor so node-scoped faults keep per-run semantics (the faults
+  timing caveat).  Guards: goodput over admitted requests ≥
+  ``GOODPUT_MIN``; every served response *bit-matches* the fault-free
+  oracle (the snapshot/rewind recovery never resets neighbours); the
+  retry machinery actually fired (``transient_faults``/``recovered`` >
+  0); chaos p99 latency stays within ``P99_FACTOR``× the fault-free
+  baseline p99 (+ ``P99_SLACK_MS`` absolute slack for backoff sleeps);
+  zero hung handles after the run.
+* **overload shedding** — a burst far over ``max_pending`` through the
+  bucketed scorer: shed submissions must fast-fail in under
+  ``SHED_MS_MAX`` ms each (no queue residence), and every admitted
+  request still completes against the oracle.
+* **stragglers under watchdog** — background-scheduler mode with a
+  periodic straggler delay and the tick watchdog armed: the watchdog
+  must stay quiet (no false trips) while every request completes.
+
+Emits ``BENCH_resilience.json`` next to the repo root and raises on
+guard failure — wired into ``benchmarks/run.py``; ``--smoke`` shrinks
+the streams for the CI smoke step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+GOODPUT_MIN = 0.99                 # completed / admitted under chaos
+SHED_MS_MAX = 10.0                 # per-submission shed fast-fail bound
+P99_FACTOR = 10.0                  # chaos p99 <= factor * clean p99 ...
+P99_SLACK_MS = 100.0               # ... + absolute slack (backoff sleeps)
+SITE_EVERY = 8                     # site failure every 8th dispatch
+NAN_EVERY = 13                     # NaN poisoning every 13th dispatch
+OOM_TIMES = 2                      # first two fused contractions OOM
+MAX_RETRIES = 8                    # per-request budget >= worst-case hits
+LM_CAPACITY = 8
+
+
+def _dims(smoke: bool) -> Dict[str, int]:
+    return {"chaos_requests": 12 if smoke else 48,
+            "burst_requests": 24 if smoke else 64,
+            "max_pending": 8,
+            "straggler_requests": 4 if smoke else 12}
+
+
+def _lm_server(inj=None):
+    from repro.core import Engine
+    from repro.launch.metering import SpanMeter
+    from repro.serve import LmRequest, RecurrentLM, TraServer
+
+    engine = Engine(executor="reference", fault_injector=inj,
+                    check_numerics=True)
+    lm = RecurrentLM(d_model=16, vocab_size=32, capacity=LM_CAPACITY)
+    server = TraServer(engine, lm, max_retries=MAX_RETRIES)
+    server.warmup()
+    # pay the first-dispatch cost outside the clock so the clean-vs-chaos
+    # p99 comparison sees steady-state ticks only (the warm run also
+    # advances the injector's run counter by a few ticks, which is fine:
+    # the schedule is periodic)
+    server.serve([LmRequest(prompt=[0], max_new_tokens=1)])
+    server.meter = SpanMeter()
+    return server, lm
+
+
+def bench_decode_chaos(n_requests: int) -> Dict:
+    """Poisson decode stream, clean baseline vs chaos schedule."""
+    import numpy as np
+
+    from repro.serve import chaos_injector, lm_mix, open_loop, \
+        poisson_arrivals
+
+    def workload(lm):
+        rng = np.random.default_rng(0)
+        reqs = lm_mix(lm, rng, n_requests, prompt_len=(1, 6),
+                      new_tokens=(1, 10))
+        return reqs, poisson_arrivals(rng, n_requests, rate_per_s=100.0)
+
+    # fault-free baseline: same engine config, same workload, no faults
+    server, lm = _lm_server()
+    reqs, arrivals = workload(lm)
+    clean = open_loop(server, reqs, arrivals)
+    assert clean.errors == 0, f"baseline had {clean.errors} errors"
+
+    inj = chaos_injector(site_every=SITE_EVERY, nan_node="relu",
+                         nan_every=NAN_EVERY, oom_times=OOM_TIMES)
+    server, lm = _lm_server(inj)
+    reqs, arrivals = workload(lm)
+    chaos = open_loop(server, reqs, arrivals)
+
+    mismatches = 0
+    for req, res in zip(reqs, chaos.results):
+        if res is None:
+            continue
+        toks, _ = lm.oracle_decode(req.prompt, req.max_new_tokens)
+        if res["tokens"] != toks:
+            mismatches += 1
+    health = server.health()
+    counters = health["counters"]
+    return {
+        "requests": n_requests,
+        "fault_schedule": {"site_every": SITE_EVERY,
+                           "nan_every": NAN_EVERY,
+                           "oom_times": OOM_TIMES},
+        "faults_fired": len(inj.log),
+        "goodput": chaos.goodput,
+        "errors": chaos.errors,
+        "oracle_mismatches": mismatches,
+        "clean_p99_ms": clean.summary["total_ms"]["p99"],
+        "chaos_p99_ms": chaos.summary["total_ms"]["p99"],
+        "hung_handles": sum(r is None for r in chaos.results)
+        - chaos.errors - chaos.shed,
+        "health_after": {"pending": health["pending"],
+                         "queue_depth": health["queue_depth"]},
+        "counters": counters,
+    }
+
+
+def bench_overload_shedding(burst: int, max_pending: int) -> Dict:
+    """Burst far over max_pending: shed fast, serve the admitted."""
+    import numpy as np
+
+    from repro.core import Engine
+    from repro.serve import FFNNScorer, ServerOverloaded, TraServer
+
+    engine = Engine(executor="reference")
+    scorer = FFNNScorer()
+    server = TraServer(engine, scorer, max_pending=max_pending)
+    server.warmup()
+    rng = np.random.default_rng(1)
+    payloads = [scorer.random_payload(rng) for _ in range(burst)]
+    handles, shed_ms = [], []
+    for p in payloads:
+        t0 = time.perf_counter()
+        h = server.submit(p)
+        dt = (time.perf_counter() - t0) * 1e3
+        handles.append(h)
+        if h.done():                   # shed: already failed, time it
+            shed_ms.append(dt)
+    server.run_until_idle()
+    served, worst = 0, 0.0
+    for p, h in zip(payloads, handles):
+        try:
+            r = h.result(timeout=0)
+        except ServerOverloaded:
+            continue
+        served += 1
+        worst = max(worst, float(np.abs(r - scorer.oracle(p)).max()))
+    return {
+        "burst": burst,
+        "max_pending": max_pending,
+        "shed": server.counters["shed"],
+        "served": served,
+        "shed_ms_max": round(max(shed_ms), 3) if shed_ms else 0.0,
+        "oracle_max_abs_err": worst,
+        "pending_after": server._pending,
+    }
+
+
+def bench_stragglers_watchdog(n_requests: int) -> Dict:
+    """Background scheduler + watchdog under periodic straggler delays."""
+    import numpy as np
+
+    from repro.core import Engine
+    from repro.serve import RecurrentLM, TraServer, chaos_injector, \
+        LmRequest
+
+    inj = chaos_injector(straggler_every=3, straggler_delay_s=0.02)
+    engine = Engine(executor="reference", fault_injector=inj)
+    lm = RecurrentLM(d_model=16, vocab_size=32, capacity=4)
+    server = TraServer(engine, lm)
+    server.warmup()
+    server.start(tick_wait_s=0.001, watchdog_timeout_s=5.0)
+    rng = np.random.default_rng(2)
+    handles = []
+    for _ in range(n_requests):
+        prompt = [int(t) for t in rng.integers(0, lm.vocab, 3)]
+        handles.append(server.submit(LmRequest(prompt, 4)))
+    ok = 0
+    for req_h in handles:
+        toks, _ = lm.oracle_decode(req_h.payload.prompt,
+                                   req_h.payload.max_new_tokens)
+        if req_h.result(timeout=60.0)["tokens"] == toks:
+            ok += 1
+    server.stop()
+    return {
+        "requests": n_requests,
+        "oracle_ok": ok,
+        "stragglers_fired": sum(1 for k, _ in inj.log
+                                if k == "straggler"),
+        "watchdog_trips": server.counters["watchdog_trips"],
+        "pending_after": server._pending,
+    }
+
+
+def run(mesh=None, smoke: bool = False) -> List[str]:
+    dims = _dims(smoke)
+    chaos = bench_decode_chaos(dims["chaos_requests"])
+    shed = bench_overload_shedding(dims["burst_requests"],
+                                   dims["max_pending"])
+    stragglers = bench_stragglers_watchdog(dims["straggler_requests"])
+    out = {"smoke": smoke, "chaos": chaos, "shedding": shed,
+           "stragglers": stragglers,
+           "guards": {"goodput_min": GOODPUT_MIN,
+                      "shed_ms_max": SHED_MS_MAX,
+                      "p99_factor": P99_FACTOR,
+                      "p99_slack_ms": P99_SLACK_MS}}
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_resilience.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+
+    lines = ["# TRA serving resilience: chaos load vs SLO guards"]
+    c = chaos["counters"]
+    lines.append(
+        f"decode chaos [reference]: {chaos['requests']} requests, "
+        f"{chaos['faults_fired']} faults fired "
+        f"(retries={c['retries']}, recovered={c['recovered']}), "
+        f"goodput {chaos['goodput']:.3f}, "
+        f"{chaos['oracle_mismatches']} oracle mismatches, p99 "
+        f"{chaos['chaos_p99_ms']:.1f} ms vs clean "
+        f"{chaos['clean_p99_ms']:.1f} ms")
+    lines.append(
+        f"overload shed: burst {shed['burst']} over "
+        f"max_pending={shed['max_pending']} -> {shed['shed']} shed "
+        f"(worst fast-fail {shed['shed_ms_max']:.2f} ms), "
+        f"{shed['served']} served, oracle err "
+        f"{shed['oracle_max_abs_err']:.2e}")
+    lines.append(
+        f"stragglers: {stragglers['stragglers_fired']} delays over "
+        f"{stragglers['requests']} requests, "
+        f"{stragglers['watchdog_trips']} watchdog trips, "
+        f"{stragglers['oracle_ok']}/{stragglers['requests']} oracle-ok")
+
+    ok_goodput = chaos["goodput"] >= GOODPUT_MIN
+    ok_oracle = chaos["oracle_mismatches"] == 0
+    ok_fired = chaos["faults_fired"] > 0 and c["recovered"] > 0 \
+        and c["transient_faults"] > 0
+    ok_tail = chaos["chaos_p99_ms"] <= \
+        P99_FACTOR * chaos["clean_p99_ms"] + P99_SLACK_MS
+    ok_hung = chaos["hung_handles"] == 0 \
+        and chaos["health_after"]["pending"] == 0
+    ok_shed = shed["shed"] > 0 and shed["shed_ms_max"] <= SHED_MS_MAX \
+        and shed["served"] + shed["shed"] == shed["burst"] \
+        and shed["oracle_max_abs_err"] <= 1e-5 \
+        and shed["pending_after"] == 0
+    ok_watch = stragglers["watchdog_trips"] == 0 \
+        and stragglers["oracle_ok"] == stragglers["requests"] \
+        and stragglers["pending_after"] == 0
+    ok = ok_goodput and ok_oracle and ok_fired and ok_tail and ok_hung \
+        and ok_shed and ok_watch
+    lines.append(
+        f"resilience guard (goodput ≥{GOODPUT_MIN}, oracle-exact "
+        f"recovery, faults fired+recovered, chaos p99 ≤ "
+        f"{P99_FACTOR:.0f}×clean+{P99_SLACK_MS:.0f}ms, shed ≤ "
+        f"{SHED_MS_MAX:.0f}ms, 0 hung, 0 false watchdog trips): "
+        f"{'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise AssertionError(f"resilience guard failed: {out}")
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    print("\n".join(run(smoke=ap.parse_args().smoke)))

@@ -19,7 +19,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (analysis, ffnn, fusion, matmul, nn_search,
-                            oocore, robustness, roofline, serve, train)
+                            oocore, resilience, robustness, roofline,
+                            serve, train)
 
     sections = [
         ("§5.1 matmul (Tables 3–4)", matmul.run),
@@ -29,6 +30,7 @@ def main(argv=None) -> int:
         ("TRA train step (BENCH_train.json)", train.run),
         ("robustness overheads (BENCH_robust.json)", robustness.run),
         ("serving: continuous batching (BENCH_serve.json)", serve.run),
+        ("serving resilience (BENCH_resilience.json)", resilience.run),
         ("out-of-core streaming (BENCH_oocore.json)", oocore.run),
         ("static verifier overhead (BENCH_analysis.json)", analysis.run),
         ("roofline (assignment g)", roofline.run),

@@ -69,11 +69,41 @@ class CompileFailure(FaultError):
     """Simulated executor compile failure (degradation-ladder trigger)."""
 
 
+#: The transient half of the taxonomy: failures a retry can clear because
+#: they name a condition of the *attempt* (a site died, a device filled,
+#: an executor's build flaked) rather than of the request.  Everything
+#: else — type errors, bad payloads, shape mismatches — is permanent:
+#: retrying replays the same deterministic rejection.
+TRANSIENT_FAULTS = (SimulatedFailure, DeviceOOM, CompileFailure)
+
+
+def is_transient(err: BaseException) -> bool:
+    """Classify an execution failure against the fault taxonomy.
+
+    True for the injected transient kinds (:data:`TRANSIENT_FAULTS`),
+    for real XLA runtime failures (``XlaRuntimeError`` — device resets,
+    allocation failures), and for numeric-guard trips
+    (:class:`repro.core.guards.NumericsError`): recomputation is
+    deterministic, so a *persistent* poisoning exhausts any retry budget
+    while injected/transient corruption clears on the next attempt.
+    """
+    if isinstance(err, TRANSIENT_FAULTS):
+        return True
+    if any(t.__name__ == "XlaRuntimeError" for t in type(err).__mro__):
+        return True
+    try:
+        from repro.core.guards import NumericsError
+    except ImportError:      # pragma: no cover - guards is a sibling
+        return False
+    return isinstance(err, NumericsError)
+
+
 @dataclasses.dataclass
 class _Fault:
     kind: str                              # site | oom | compile | straggler | nan
     node: Union[int, str, None] = None     # plan-sig node id or label substring
     step: Optional[int] = None             # 0-based run index (on_run counter)
+    every: Optional[int] = None            # periodic: fire when step % every == 0
     times: int = 1                         # remaining firings; -1 = unlimited
     delay: float = 0.0                     # straggler sleep seconds
     ok_chunk: int = 0                      # oom: succeed when streaming chunk <= this
@@ -86,6 +116,19 @@ class _Fault:
         if isinstance(self.node, str):
             return self.node in label
         return self.node is None
+
+    def due_at(self, idx: int) -> bool:
+        """Is this fault scheduled for run index ``idx``?
+
+        ``step`` pins one run; ``every`` fires periodically (every N-th
+        run, skipping run 0 so warm starts see at least one good tick).
+        With neither selector a run-scoped fault never fires.
+        """
+        if self.step is not None:
+            return self.step == idx
+        if self.every is not None:
+            return idx > 0 and idx % self.every == 0
+        return False
 
     def spend(self) -> bool:
         """Consume one firing; False if the budget is exhausted."""
@@ -114,8 +157,13 @@ class FaultInjector:
 
     # -- scripting ---------------------------------------------------------
     def inject_site_failure(self, *, node=None, step: Optional[int] = None,
+                            every: Optional[int] = None,
                             times: int = 1) -> "FaultInjector":
-        self._faults.append(_Fault("site", node=node, step=step, times=times))
+        """Kill one run (``step=``) or every N-th run (``every=``) — the
+        periodic form is the chaos-harness schedule: a serving loop sees
+        a site die on a fixed cadence and must keep its goodput SLO."""
+        self._faults.append(_Fault("site", node=node, step=step,
+                                   every=every, times=times))
         return self
 
     def inject_oom(self, *, node=None, ok_chunk: int = 1,
@@ -143,14 +191,21 @@ class FaultInjector:
         return self
 
     def inject_straggler(self, *, node=None, step: Optional[int] = None,
-                         delay: float = 0.05,
+                         every: Optional[int] = None, delay: float = 0.05,
                          times: int = 1) -> "FaultInjector":
         self._faults.append(_Fault("straggler", node=node, step=step,
-                                   delay=delay, times=times))
+                                   every=every, delay=delay, times=times))
         return self
 
-    def inject_nan(self, *, node, times: int = 1) -> "FaultInjector":
-        self._faults.append(_Fault("nan", node=node, times=times))
+    def inject_nan(self, *, node, step: Optional[int] = None,
+                   every: Optional[int] = None,
+                   times: int = 1) -> "FaultInjector":
+        """Poison a node's output with NaN — pinned to one run
+        (``step=``), periodic (``every=``), or unconditional (neither).
+        Periodic NaN only behaves per-run on the eager ``reference``
+        executor (see the timing caveat in the module docstring)."""
+        self._faults.append(_Fault("nan", node=node, step=step,
+                                   every=every, times=times))
         return self
 
     # -- hooks (called by the Engine / executors) --------------------------
@@ -159,7 +214,7 @@ class FaultInjector:
         idx = self.runs
         self.runs += 1
         for f in self._faults:
-            if f.node is not None or f.step != idx:
+            if f.node is not None or not f.due_at(idx):
                 continue
             if f.kind == "site" and f.spend():
                 self.log.append(("site", f"run {idx}"))
@@ -175,7 +230,8 @@ class FaultInjector:
         for f in self._faults:
             if f.node is None or not f.matches_node(nid, label):
                 continue
-            if f.step is not None and f.step != max(0, self.runs - 1):
+            if (f.step is not None or f.every is not None) \
+                    and not f.due_at(max(0, self.runs - 1)):
                 continue
             if f.kind == "site" and f.spend():
                 self.log.append(("site", label))

@@ -243,6 +243,14 @@ def lower_tra_workloads(n_sites: int = 256) -> Dict:
             rec["optimize_s"] = round(time.time() - t0, 1)
             rec["cost_floats"] = compiled.cost
             rec["plan"] = compiled.describe()
+            # launch gate: the per-site programs this launcher would hand
+            # out must agree on their collective schedules (a divergence
+            # hangs or mis-sums at run time) — strict, so a bad plan
+            # fails here, before any site executes
+            from repro.launch.sites import verify_site_programs
+            verify_site_programs([compiled.plan] * min(n_sites, 8),
+                                 {"sites": n_sites})
+            rec["site_schedule_verified"] = True
             sds = [jax.ShapeDtypeStruct(
                 tuple(compiled.input_rtypes[n].key_shape)
                 + tuple(compiled.input_rtypes[n].bound), jnp.float32)

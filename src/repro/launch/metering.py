@@ -323,7 +323,10 @@ class RequestSpan:
     ``tokens`` counts produced output units (generated tokens for decode
     servables, scored rows for stateless ones); ``artifacts`` records the
     compile-cache ``artifact_id`` of every program dispatch that served
-    this request.
+    this request.  ``outcome`` is the request's fate — ``"ok"`` or one of
+    the resilience outcomes (``shed`` / ``cancelled`` / ``deadline`` /
+    ``failed``); shed spans complete without ever starting, so their
+    ``t_start`` stays ``None``.
     """
 
     rid: int
@@ -333,6 +336,7 @@ class RequestSpan:
     t_complete: Optional[float] = None
     tokens: int = 0
     artifacts: list = dataclasses.field(default_factory=list)
+    outcome: str = "ok"
 
     @property
     def queue_wait_s(self) -> Optional[float]:
@@ -462,10 +466,20 @@ class SpanMeter:
         return [s for s in self.spans if s.t_complete is not None]
 
     def summary(self) -> Dict[str, object]:
-        """Percentile latencies (ms) + aggregate throughput (tokens/s)."""
+        """Percentile latencies (ms) + aggregate throughput (tokens/s).
+
+        Latency percentiles cover the spans that were actually
+        *scheduled* (``t_start`` set) — shed requests fail before ever
+        starting, so folding them in would deflate queue-wait and
+        service numbers; they are tallied in ``outcomes`` instead.
+        """
         done = self.completed()
         if not done:
             return {"requests": 0}
+        served = [s for s in done if s.t_start is not None]
+        outcomes: Dict[str, int] = {}
+        for s in done:
+            outcomes[s.outcome] = outcomes.get(s.outcome, 0) + 1
         t0 = min(s.t_submit for s in done)
         t1 = max(s.t_complete for s in done)
         window = max(t1 - t0, 1e-9)
@@ -476,10 +490,11 @@ class SpanMeter:
             "tokens": tokens,
             "window_s": round(window, 6),
             "tokens_per_s": round(tokens / window, 3),
+            "outcomes": outcomes,
             "total_ms": {k: round(v * ms, 3) for k, v in percentiles(
-                [s.total_s for s in done]).items()},
+                [s.total_s for s in served]).items()},
             "queue_wait_ms": {k: round(v * ms, 3) for k, v in percentiles(
-                [s.queue_wait_s for s in done]).items()},
+                [s.queue_wait_s for s in served]).items()},
             "service_ms": {k: round(v * ms, 3) for k, v in percentiles(
-                [s.service_s for s in done]).items()},
+                [s.service_s for s in served]).items()},
         }

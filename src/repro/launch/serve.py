@@ -115,6 +115,15 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission bound: shed submissions over this "
+                         "many pending requests (ServerOverloaded)")
+    ap.add_argument("--max-queue-wait", type=float, default=None,
+                    help="shed requests queued longer than this (s)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline (s), scheduler-enforced")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="per-request transient-fault retry budget")
     ap.add_argument("--json", action="store_true",
                     help="emit the full report as JSON")
     ap.add_argument("--dense-oracle", action="store_true",
@@ -150,11 +159,15 @@ def main(argv=None) -> int:
                           prompt_len=(1, max(1, args.prompt_len)),
                           new_tokens=(1, max(1, args.gen)))
 
-    server = TraServer(engine, servable)
+    server = TraServer(engine, servable,
+                       max_pending=args.max_pending,
+                       max_queue_wait_s=args.max_queue_wait,
+                       max_retries=args.retries)
     server.warmup()
     if args.mode == "poisson":
         arrivals = poisson_arrivals(rng, args.requests, args.rate)
-        report = open_loop(server, payloads, arrivals)
+        report = open_loop(server, payloads, arrivals,
+                           deadline_s=args.deadline)
     else:
         report = closed_loop(server, lambda i: payloads[i],
                              n_requests=args.requests,
@@ -163,20 +176,25 @@ def main(argv=None) -> int:
     stats = server.stats()
     out = {**report.to_json(),
            "cache_misses_since_warmup": stats["cache_misses_since_warmup"],
-           "artifacts": stats["artifacts"]}
+           "artifacts": stats["artifacts"],
+           "health": stats["health"]}
     if args.json:
         print(json.dumps(out, indent=2))
     else:
         t = out["total_ms"]
         print(f"[serve] {servable.name} on {engine.executor}: "
-              f"{report.requests} requests ({report.errors} errors), "
-              f"{out['tokens_per_s']:.1f} tok/s")
+              f"{report.requests} requests ({report.errors} errors, "
+              f"{report.shed} shed), {out['tokens_per_s']:.1f} tok/s")
         print(f"[serve] latency ms p50/p95/p99 = "
               f"{t['p50']:.1f}/{t['p95']:.1f}/{t['p99']:.1f}; "
               f"queue-wait p50 = {out['queue_wait_ms']['p50']:.1f} ms")
         print(f"[serve] artifacts: {len(out['artifacts'])} pinned, "
               f"{out['cache_misses_since_warmup']} cache misses "
               f"after warmup")
+        hc = out["health"]["counters"]
+        print(f"[serve] health {out['health']['status']}: "
+              f"retries={hc['retries']} recovered={hc['recovered']} "
+              f"shed={hc['shed']} deadline={hc['deadline_expired']}")
     return 1 if report.errors else 0
 
 

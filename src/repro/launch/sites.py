@@ -1,0 +1,80 @@
+"""Multi-host launcher gate: verify per-site programs before execution.
+
+The static verifier's collectives pass self-checks SPMD plans (one
+program, every site runs it by construction).  A multi-host *launcher*
+is the place where that assumption can actually break: it hands each
+site a physical program, and nothing forces externally supplied per-site
+plans — hand-edited, planner-v2 candidates, or programs deserialized
+from different optimizer versions — to agree on their collective
+schedules.  A disagreement is the worst failure class in the paper's
+distributed story: a site with an extra collective blocks forever (hang)
+and a mismatched reducer/axis silently computes wrong sums.
+
+:func:`verify_site_programs` is the launch-time gate (the PR 9 ROADMAP
+follow-up): it derives each site's ordered collective schedule with
+:func:`repro.analysis.collectives.collective_schedule` — the same
+lowering the shard_map executor performs — and aligns them with
+:func:`repro.analysis.collectives.check_site_schedules`, raising
+:class:`~repro.analysis.diagnostics.PlanVerificationError` before any
+site starts executing.  ``repro.launch.dryrun --tra-workloads`` routes
+its compiled plans through this gate, modelling a launcher verifying the
+programs it is about to distribute.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+from repro.analysis.collectives import (check_site_schedules,
+                                        collective_schedule)
+from repro.analysis.diagnostics import Diagnostics
+
+PASS = "site-programs"
+
+
+def site_collective_schedules(site_roots: Sequence,
+                              axis_sizes: Dict[str, int],
+                              diags: Optional[Diagnostics] = None):
+    """Per-site ordered collective schedules for a list of physical
+    plan roots (one per site).  Lowering problems (unknown axes, bad
+    reducers) are reported into ``diags``; a site whose plan cannot be
+    lowered at all contributes an empty schedule plus an error."""
+    from repro.core.guards import label_nodes
+    if diags is None:
+        diags = Diagnostics()
+    schedules = []
+    for site, root in enumerate(site_roots):
+        try:
+            labels = label_nodes((root,))
+            schedules.append(collective_schedule(root, axis_sizes,
+                                                 labels=labels,
+                                                 diags=diags))
+        except (ValueError, TypeError) as exc:
+            diags.add(PASS, "error",
+                      f"site {site}: collective lowering failed: {exc}",
+                      node=root)
+            schedules.append([])
+    return schedules
+
+
+def verify_site_programs(site_roots: Sequence,
+                         axis_sizes: Dict[str, int], *,
+                         strict: bool = True) -> Diagnostics:
+    """Verify externally supplied per-site programs agree on collectives.
+
+    ``site_roots[i]`` is the physical plan (:class:`repro.core.plan.
+    IANode`, e.g. ``CompiledExpr.plan``) site *i* would execute;
+    ``axis_sizes`` is the launch mesh's axis table.  Derives each site's
+    collective schedule and checks the cross-site alignment invariant —
+    identical ordered sequences with matching kind/axis/reducer.  With
+    ``strict`` (the default: this is a pre-launch gate, not a linter)
+    any error raises :class:`~repro.analysis.diagnostics.
+    PlanVerificationError`; otherwise the diagnostics are returned for
+    the caller to render.
+    """
+    diags = Diagnostics()
+    schedules = site_collective_schedules(site_roots, axis_sizes,
+                                          diags=diags)
+    check_site_schedules(schedules, diags=diags)
+    if strict:
+        diags.raise_if_errors()
+    return diags

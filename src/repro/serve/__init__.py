@@ -3,26 +3,35 @@
 Entry points:
 
 * :class:`~repro.serve.server.TraServer` — the server: admission queue,
-  continuous-batching scheduler, pinned compile-cache artifacts.
+  continuous-batching scheduler, pinned compile-cache artifacts, plus
+  the resilience layer (load shedding, cancellation/deadlines,
+  transient-fault retry with decode-state snapshots, crash containment,
+  tick watchdog, :meth:`~repro.serve.server.TraServer.health`).
 * :class:`~repro.serve.servable.FFNNScorer` /
   :class:`~repro.serve.servable.RecurrentLM` — the paper-native §5.3
   scorer and the smoke step-decode LM it serves.
 * :mod:`repro.serve.loadgen` — Poisson / closed-loop drivers emitting
-  p50/p95/p99 latency and tokens/s.
+  p50/p95/p99 latency and tokens/s, and :func:`chaos_injector` for
+  fault-schedule chaos runs.
 
-See ``docs/serving.md`` for the architecture.
+See ``docs/serving.md`` for the architecture and resilience model.
 """
-from repro.serve.loadgen import (LoadReport, closed_loop, lm_mix, open_loop,
-                                 poisson_arrivals, scorer_mix)
+from repro.serve.loadgen import (LoadReport, chaos_injector, closed_loop,
+                                 lm_mix, open_loop, poisson_arrivals,
+                                 scorer_mix)
 from repro.serve.servable import (BatchServable, FFNNScorer, LmRequest,
                                   RecurrentLM, Servable, StepServable,
                                   pick_bucket)
-from repro.serve.server import RequestHandle, TraServer
+from repro.serve.server import (DeadlineExceeded, RequestCancelled,
+                                RequestHandle, RetryBudgetExceeded,
+                                ServerOverloaded, ServerStopped, TraServer)
 
 __all__ = [
-    "LoadReport", "closed_loop", "lm_mix", "open_loop",
+    "LoadReport", "chaos_injector", "closed_loop", "lm_mix", "open_loop",
     "poisson_arrivals", "scorer_mix",
     "BatchServable", "FFNNScorer", "LmRequest", "RecurrentLM",
     "Servable", "StepServable", "pick_bucket",
-    "RequestHandle", "TraServer",
+    "DeadlineExceeded", "RequestCancelled", "RequestHandle",
+    "RetryBudgetExceeded", "ServerOverloaded", "ServerStopped",
+    "TraServer",
 ]

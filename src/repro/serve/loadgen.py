@@ -18,6 +18,16 @@ p50/p95/p99 of total, queue-wait, and service spans — and the payload
 mix helpers (:func:`scorer_mix`, :func:`lm_mix`) draw the heterogeneous
 request shapes (feature vectors / varied prompt+generation lengths) the
 bucket and slot schedulers are exercised against.
+
+**Chaos mode.**  :func:`chaos_injector` scripts the PR-6
+:class:`~repro.core.faults.FaultInjector` with *periodic* faults (every
+N-th dispatch: site failure, NaN poisoning, device OOM) so a load run
+doubles as a resilience drill: drive :func:`open_loop` with the
+injector threaded through the engine and the server's retry/snapshot
+machinery must hold the goodput SLO (``benchmarks/resilience.py``).
+Reports split ``errors`` (failed after admission) from ``shed``
+(admission-control fast-fails) so goodput is measured over admitted
+requests only.
 """
 from __future__ import annotations
 
@@ -27,8 +37,9 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.faults import FaultInjector
 from repro.serve.servable import BatchServable, LmRequest, StepServable
-from repro.serve.server import RequestHandle, TraServer
+from repro.serve.server import RequestHandle, ServerOverloaded, TraServer
 
 
 def poisson_arrivals(rng: np.random.Generator, n: int,
@@ -61,13 +72,52 @@ def lm_mix(sv: StepServable, rng: np.random.Generator, n: int,
     return reqs
 
 
+def chaos_injector(*, site_every: Optional[int] = None,
+                   nan_node: Optional[str] = None,
+                   nan_every: Optional[int] = None,
+                   oom_times: int = 0, oom_ok_chunk: int = 1,
+                   straggler_every: Optional[int] = None,
+                   straggler_delay_s: float = 0.05) -> FaultInjector:
+    """Script a periodic fault schedule for a chaos load run.
+
+    * ``site_every`` — a :class:`~repro.core.faults.SimulatedFailure`
+      kills every N-th dispatch (run-scoped, fires on every executor).
+    * ``nan_node`` + ``nan_every`` — NaN-poison the named plan node on
+      every N-th dispatch; per-run semantics need the eager
+      ``reference`` executor (see the faults timing caveat) and
+      ``Engine(check_numerics=True)`` to turn silent corruption into a
+      retryable :class:`~repro.core.guards.NumericsError`.
+    * ``oom_times`` — the first N fused contractions OOM unless streamed
+      at ``oom_ok_chunk``.
+    * ``straggler_every`` — delay every N-th dispatch by
+      ``straggler_delay_s`` (watchdog drills).
+
+    All periodic faults are unlimited (``times=-1``): the schedule runs
+    as long as the load does.
+    """
+    inj = FaultInjector()
+    if site_every is not None:
+        inj.inject_site_failure(every=site_every, times=-1)
+    if nan_node is not None:
+        inj.inject_nan(node=nan_node, every=nan_every, times=-1)
+    if oom_times > 0:
+        inj.inject_oom(ok_chunk=oom_ok_chunk, times=oom_times)
+    if straggler_every is not None:
+        inj.inject_straggler(every=straggler_every,
+                             delay=straggler_delay_s, times=-1)
+    return inj
+
+
 @dataclasses.dataclass
 class LoadReport:
-    """One load run: meter summary + error count + wall time.
+    """One load run: meter summary + outcome counts + wall time.
 
     ``results`` holds the per-request responses in submission order
-    (``None`` where the request failed) so callers can cross-check
-    served outputs against an oracle.
+    (``None`` where the request failed or was shed) so callers can
+    cross-check served outputs against an oracle.  ``errors`` counts
+    admitted requests that failed; ``shed`` counts admission-control
+    fast-fails (:class:`~repro.serve.server.ServerOverloaded`) — kept
+    apart because the goodput SLO is defined over admitted requests.
     """
 
     mode: str
@@ -76,6 +126,18 @@ class LoadReport:
     wall_s: float
     summary: Dict[str, Any]
     results: List[Any] = dataclasses.field(default_factory=list)
+    shed: int = 0
+
+    @property
+    def admitted(self) -> int:
+        return self.requests - self.shed
+
+    @property
+    def goodput(self) -> float:
+        """Fraction of *admitted* requests that completed with a result."""
+        if self.admitted <= 0:
+            return 1.0
+        return (self.admitted - self.errors) / self.admitted
 
     @property
     def tokens_per_s(self) -> float:
@@ -83,24 +145,30 @@ class LoadReport:
 
     def to_json(self) -> Dict[str, Any]:
         return {"mode": self.mode, "requests": self.requests,
-                "errors": self.errors, "wall_s": round(self.wall_s, 4),
+                "errors": self.errors, "shed": self.shed,
+                "goodput": round(self.goodput, 6),
+                "wall_s": round(self.wall_s, 4),
                 **self.summary}
 
 
 def _collect(handles: List[Optional[RequestHandle]]) -> tuple:
-    errors, results = 0, []
+    errors, shed, results = 0, 0, []
     for h in handles:
         try:
             results.append(h.result(timeout=0) if h is not None else None)
-        except Exception:
+        except ServerOverloaded:
+            shed += 1
+            results.append(None)
+        except Exception:  # noqa: BLE001 — tallied, surfaced via report
             errors += 1
             results.append(None)
-    return errors, results
+    return errors, shed, results
 
 
 def open_loop(server: TraServer, payloads: List[Any],
               arrivals: List[float],
-              clock: Optional[Callable[[], float]] = None) -> LoadReport:
+              clock: Optional[Callable[[], float]] = None,
+              deadline_s: Optional[float] = None) -> LoadReport:
     """Drive a timed arrival schedule; tick whenever work is pending."""
     if len(payloads) != len(arrivals):
         raise ValueError("payloads and arrivals must align")
@@ -112,16 +180,17 @@ def open_loop(server: TraServer, payloads: List[Any],
     while nxt < len(payloads) or not server.idle():
         now = clock() - t0
         while nxt < len(payloads) and arrivals[order[nxt]] <= now:
-            handles[order[nxt]] = server.submit(payloads[order[nxt]])
+            handles[order[nxt]] = server.submit(payloads[order[nxt]],
+                                                deadline_s=deadline_s)
             nxt += 1
         if server.step() == 0 and nxt < len(payloads):
             # idle gap before the next arrival: sleep it off
             time.sleep(min(1e-3, max(0.0,
                                      arrivals[order[nxt]] - (clock() - t0))))
     wall = clock() - t0
-    errors, results = _collect(handles)
+    errors, shed, results = _collect(handles)
     return LoadReport("open_loop", len(payloads), errors, wall,
-                      server.meter.summary(), results)
+                      server.meter.summary(), results, shed=shed)
 
 
 def closed_loop(server: TraServer, make_payload: Callable[[int], Any],
@@ -145,6 +214,6 @@ def closed_loop(server: TraServer, make_payload: Callable[[int], Any],
         server.step()
         inflight = [h for h in inflight if not h.done()]
     wall = clock() - t0
-    errors, results = _collect(handles)
+    errors, shed, results = _collect(handles)
     return LoadReport("closed_loop", len(handles), errors, wall,
-                      server.meter.summary(), results)
+                      server.meter.summary(), results, shed=shed)

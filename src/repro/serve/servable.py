@@ -111,6 +111,21 @@ class StepServable(Servable):
                       ) -> Tuple[List[int], List[np.ndarray]]:
         raise NotImplementedError
 
+    # -- fault recovery ----------------------------------------------------
+    def snapshot_state(self, state: TensorRelation) -> TensorRelation:
+        """Cheap host copy of the slot-keyed state — the recovery point
+        the server commits after every good tick.  Pulling the buffer to
+        host ``numpy`` decouples the snapshot from device lifetime (a
+        faulted dispatch cannot corrupt or free it)."""
+        return TensorRelation(np.array(state.data, copy=True),
+                              state.rtype, state.mask)
+
+    def restore_state(self, snapshot: TensorRelation) -> TensorRelation:
+        """Re-materialize a :meth:`snapshot_state` copy on device."""
+        import jax.numpy as jnp
+        return TensorRelation(jnp.asarray(snapshot.data),
+                              snapshot.rtype, snapshot.mask)
+
     def programs(self) -> List[Dict[str, Expr]]:
         return [self.step_program()]
 

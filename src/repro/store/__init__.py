@@ -9,7 +9,8 @@ compiled plans with double-buffered H2D transfers.  See
 from repro.store.autotune import (chunk_slices, device_memory_budget,
                                   stream_budget_bytes)
 from repro.store.relation import (DEFAULT_BLOCK_BYTES, HostRelation,
-                                  RelationStore, StoreError)
+                                  RelationStore, SpillCorruption,
+                                  StoreError)
 from repro.store.stream import NotStreamable, StreamExecutor, StreamPlan
 
 __all__ = [
@@ -17,6 +18,7 @@ __all__ = [
     "HostRelation",
     "NotStreamable",
     "RelationStore",
+    "SpillCorruption",
     "StoreError",
     "StreamExecutor",
     "StreamPlan",

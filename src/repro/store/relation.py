@@ -13,7 +13,10 @@ A :class:`RelationStore` owns the blocks.  It tracks resident host bytes
 and, past an optional ``ram_limit_bytes``, spills least-recently-used
 blocks to a disk tier (``numpy`` ``.npy`` files under ``spill_dir``),
 faulting them back in transparently on access — so the host tier itself
-degrades gracefully instead of OOMing the driver process.
+degrades gracefully instead of OOMing the driver process.  Spill writes
+are atomic (temp file + ``os.replace``) and carry a content checksum
+verified on fault-in; a torn or corrupt spill file raises
+:class:`SpillCorruption` instead of returning silently wrong data.
 
 Blocks are split at ``block_bytes`` targets (default 64 MiB) so spill and
 streaming granularity stay decoupled from how the user hands the data in.
@@ -23,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import tempfile
+import zlib
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -36,6 +40,18 @@ class StoreError(RuntimeError):
     """Raised on malformed store usage (shape/range mismatches)."""
 
 
+class SpillCorruption(StoreError):
+    """A spilled block failed verification on fault-in.
+
+    Raised when a disk-tier ``.npy`` file is unreadable (torn write,
+    truncation) or reads back with a different content checksum than the
+    block record carries — the store refuses to hand back silently wrong
+    data.  Spill writes go through a temp file + ``os.replace`` so a
+    crash mid-spill can at worst leave a stale-but-whole previous
+    version, never a half-written one.
+    """
+
+
 @dataclasses.dataclass
 class _Block:
     """One contiguous key-range ``[start, stop)`` along the split dim."""
@@ -46,6 +62,7 @@ class _Block:
     path: Optional[str] = None      # .npy file when spilled
     nbytes: int = 0
     seq: int = 0                    # LRU clock; larger = more recent
+    checksum: Optional[int] = None  # crc32 of the block's raw bytes
 
 
 class HostRelation:
@@ -291,7 +308,16 @@ class RelationStore:
             if victim is None:
                 return                  # nothing evictable — stay resident
             path = victim.path or self._spill_path(victim)
-            np.save(path, victim.data)
+            # atomic spill: write beside the target, fsync, then rename —
+            # a crash mid-write leaves the previous whole file (or none),
+            # never a torn one that would fault back in silently wrong
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                np.save(f, victim.data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            victim.checksum = zlib.crc32(victim.data.tobytes())
             victim.path = path
             victim.data = None
             self.ram_bytes -= victim.nbytes
@@ -302,7 +328,25 @@ class RelationStore:
         self._seq += 1
         blk.seq = self._seq             # touch for LRU
         if blk.data is None:
-            blk.data = np.load(blk.path)
+            try:
+                data = np.load(blk.path)
+            except Exception as err:
+                raise SpillCorruption(
+                    f"spilled block [{blk.start}, {blk.stop}) at "
+                    f"{blk.path} is unreadable (torn or truncated "
+                    f"write): {err!r}") from err
+            if data.nbytes != blk.nbytes:
+                raise SpillCorruption(
+                    f"spilled block [{blk.start}, {blk.stop}) at "
+                    f"{blk.path} read back {data.nbytes} bytes, "
+                    f"expected {blk.nbytes}")
+            if blk.checksum is not None \
+                    and zlib.crc32(data.tobytes()) != blk.checksum:
+                raise SpillCorruption(
+                    f"spilled block [{blk.start}, {blk.stop}) at "
+                    f"{blk.path} failed its content checksum — on-disk "
+                    f"bytes differ from what was spilled")
+            blk.data = data
             self.ram_bytes += blk.nbytes
             self.unspill_events += 1
             self.unspill_bytes += blk.nbytes

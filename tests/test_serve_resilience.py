@@ -1,0 +1,383 @@
+"""Serving resilience: admission control, deadlines, fault recovery.
+
+TraServer under the PR-6 fault model.  The load-bearing guarantees:
+
+* **admission** — over ``max_pending`` a submission is shed instantly
+  with :class:`ServerOverloaded` (never queued), and ``max_queue_wait_s``
+  bounds queue residence even when the scheduler window never reaches
+  the request;
+* **withdrawal** — ``cancel()`` and ``deadline_s=`` release the pending
+  count *and* the decode slot (state row zeroed), whether the request is
+  still queued or mid-decode, and never disturb its neighbours;
+* **fault isolation** — transient faults (site failure, OOM, NaN trips)
+  are retried under a per-request budget with the decode state rewound
+  to the last good tick, so recovered responses are *bit-identical* to
+  the fault-free oracle; permanent errors fail only their victims and
+  the server keeps serving;
+* **containment** — a crashed or hung scheduler fails every in-flight
+  handle with a chained diagnostic instead of stranding callers, and
+  :meth:`TraServer.health` reports it.
+
+Every test asserts the server drains clean: ``pending == 0``, no
+occupied slots, free state rows zero.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Engine
+from repro.core.faults import (CompileFailure, DeviceOOM, FaultInjector,
+                               SimulatedFailure, is_transient)
+from repro.core.guards import NumericsError
+from repro.launch.metering import SpanMeter
+from repro.serve import (DeadlineExceeded, FFNNScorer, LmRequest,
+                         RecurrentLM, RequestCancelled, RetryBudgetExceeded,
+                         ServerOverloaded, ServerStopped, TraServer)
+
+pytestmark = pytest.mark.faults
+
+
+def small_lm(capacity=2):
+    return RecurrentLM(d_model=16, vocab_size=32, capacity=capacity)
+
+
+def scorer_server(inj=None, **kw):
+    eng = Engine(executor="reference", fault_injector=inj)
+    sc = FFNNScorer()
+    server = TraServer(eng, sc, **kw)
+    server.warmup()
+    return server, sc
+
+
+def lm_server(inj=None, capacity=2, check_numerics=False, **kw):
+    eng = Engine(executor="reference", fault_injector=inj,
+                 check_numerics=check_numerics)
+    lm = small_lm(capacity)
+    server = TraServer(eng, lm, **kw)
+    server.warmup()
+    return server, lm
+
+
+def assert_drained(server):
+    """The invariant every test ends on: nothing leaked."""
+    assert server._pending == 0 and server.idle()
+    assert not server._waiting
+    if hasattr(server, "_slots"):
+        assert all(s is None for s in server._slots)
+        np.testing.assert_allclose(np.asarray(server._state.data), 0.0)
+
+
+# =========================================================================
+# fault taxonomy (core/faults.py)
+# =========================================================================
+
+class TestTaxonomy:
+    def test_is_transient_classification(self):
+        assert is_transient(SimulatedFailure("site died"))
+        assert is_transient(DeviceOOM("oom"))
+        assert is_transient(CompileFailure("flake"))
+        assert is_transient(NumericsError("nan at T[join]"))
+        assert not is_transient(TypeError("bad payload"))
+        assert not is_transient(ValueError("shape mismatch"))
+        assert not is_transient(KeyError("missing input"))
+
+    def test_periodic_site_fault_fires_every_nth_run(self):
+        inj = FaultInjector().inject_site_failure(every=3, times=-1)
+        fired = []
+        for idx in range(8):
+            try:
+                inj.on_run()
+            except SimulatedFailure:
+                fired.append(idx)
+        assert fired == [3, 6]            # run 0 always survives
+
+    def test_step_scoped_fault_fires_once(self):
+        inj = FaultInjector().inject_site_failure(step=1)
+        inj.on_run()
+        with pytest.raises(SimulatedFailure):
+            inj.on_run()
+        inj.on_run()                      # budget spent
+
+
+# =========================================================================
+# admission control & shedding
+# =========================================================================
+
+class TestAdmission:
+    def test_over_max_pending_sheds_fast(self):
+        server, sc = scorer_server(max_pending=2)
+        rng = np.random.default_rng(0)
+        kept = [server.submit(sc.random_payload(rng)) for _ in range(2)]
+        t0 = time.perf_counter()
+        shed = server.submit(sc.random_payload(rng))
+        shed_ms = (time.perf_counter() - t0) * 1e3
+        assert shed.done() and shed_ms < 10.0          # fast-fail SLO
+        with pytest.raises(ServerOverloaded, match="shed"):
+            shed.result(timeout=0)
+        assert shed.span.outcome == "shed"
+        assert server.counters["shed"] == 1
+        assert server._pending == 2                    # shed never counted
+        server.run_until_idle()
+        for h in kept:
+            np.testing.assert_allclose(h.result(timeout=0),
+                                       sc.oracle(h.payload), atol=1e-5)
+        assert_drained(server)
+
+    def test_max_queue_wait_sheds_stale_requests(self):
+        t = [0.0]
+        meter = SpanMeter(clock=lambda: t[0])
+        server, sc = scorer_server(meter=meter, max_queue_wait_s=1.0)
+        rng = np.random.default_rng(1)
+        stale = server.submit(sc.random_payload(rng))
+        t[0] = 2.0                        # queued past the wait bound
+        fresh = server.submit(sc.random_payload(rng))
+        server.run_until_idle()
+        with pytest.raises(ServerOverloaded, match="max_queue_wait"):
+            stale.result(timeout=0)
+        assert server.counters["shed"] == 1
+        np.testing.assert_allclose(fresh.result(timeout=0),
+                                   sc.oracle(fresh.payload), atol=1e-5)
+        assert_drained(server)
+
+    def test_serve_mixed_shed_retried_completed(self):
+        inj = FaultInjector().inject_site_failure(step=0)
+        server, sc = scorer_server(inj, max_pending=2)
+        rng = np.random.default_rng(2)
+        payloads = [sc.random_payload(rng) for _ in range(4)]
+        results = server.serve(payloads, return_exceptions=True)
+        assert [isinstance(r, ServerOverloaded) for r in results] == \
+            [False, False, True, True]
+        for p, r in zip(payloads[:2], results[:2]):
+            np.testing.assert_allclose(r, sc.oracle(p), atol=1e-5)
+        assert server.counters["shed"] == 2
+        assert server.counters["transient_faults"] == 1
+        assert server.counters["recovered"] == 2       # both retried once
+        assert_drained(server)
+
+
+# =========================================================================
+# cancellation & deadlines (satellite: lifecycle coverage)
+# =========================================================================
+
+class TestCancellation:
+    def test_cancel_while_queued_fails_immediately(self):
+        server, sc = scorer_server()
+        h = server.submit(sc.random_payload(np.random.default_rng(3)))
+        assert h.cancel() and h.done() and h.cancelled()
+        with pytest.raises(RequestCancelled, match="while queued"):
+            h.result(timeout=0)
+        assert h.cancel() is False        # already finished
+        assert server.counters["cancelled"] == 1
+        assert_drained(server)
+
+    def test_cancel_mid_decode_frees_slot_and_zeroes_row(self):
+        server, lm = lm_server(capacity=2)
+        victim = server.submit(LmRequest([3, 1, 4], 8))
+        neighbour = server.submit(LmRequest([2, 7], 3))
+        for _ in range(2):                # both mid-decode now
+            server.step()
+        assert server._slots[0].handle is victim
+        assert victim.cancel()
+        assert not victim.done()          # eviction happens at next tick
+        server.step()
+        with pytest.raises(RequestCancelled, match="slot 0 freed"):
+            victim.result(timeout=0)
+        assert server._slots[0] is None   # slot reclaimed
+        np.testing.assert_allclose(       # state row zeroed
+            np.asarray(server._state.data)[0], 0.0)
+        server.run_until_idle()           # neighbour rides on undisturbed
+        toks, _ = lm.oracle_decode([2, 7], 3)
+        assert neighbour.result(timeout=0)["tokens"] == toks
+        assert server.counters["cancelled"] == 1
+        assert_drained(server)
+
+    def test_deadline_expiry_under_saturated_server(self):
+        t = [0.0]
+        meter = SpanMeter(clock=lambda: t[0])
+        server, lm = lm_server(capacity=1, meter=meter)
+        hog = server.submit(LmRequest([1, 2], 6))
+        server.step()                     # hog takes the only slot
+        doomed = server.submit(LmRequest([5], 2), deadline_s=1.0)
+        server.step()                     # still queued: capacity 1
+        assert not doomed.done()
+        t[0] = 2.0                        # deadline passes while queued
+        server.step()
+        with pytest.raises(DeadlineExceeded, match="missed its deadline"):
+            doomed.result(timeout=0)
+        assert server.counters["deadline_expired"] == 1
+        server.run_until_idle()
+        toks, _ = lm.oracle_decode([1, 2], 6)
+        assert hog.result(timeout=0)["tokens"] == toks
+        assert_drained(server)
+
+    def test_deadline_expiry_mid_decode_reclaims_slot(self):
+        t = [0.0]
+        meter = SpanMeter(clock=lambda: t[0])
+        server, lm = lm_server(capacity=2, meter=meter)
+        doomed = server.submit(LmRequest([3, 3, 3], 50), deadline_s=1.0)
+        safe = server.submit(LmRequest([4, 2], 4))
+        server.step()                     # both slotted, decoding
+        t[0] = 5.0
+        server.step()                     # sweep evicts the expired seq
+        with pytest.raises(DeadlineExceeded, match="mid-decode"):
+            doomed.result(timeout=0)
+        assert server._slots[0] is None
+        np.testing.assert_allclose(np.asarray(server._state.data)[0], 0.0)
+        server.run_until_idle()
+        toks, _ = lm.oracle_decode([4, 2], 4)
+        assert safe.result(timeout=0)["tokens"] == toks
+        assert server.counters["deadline_expired"] == 1
+        assert_drained(server)
+
+
+# =========================================================================
+# fault-isolated retry (tentpole)
+# =========================================================================
+
+class TestRetry:
+    def test_batch_transient_fault_retried_matches_oracle(self):
+        inj = FaultInjector().inject_site_failure(step=0)
+        server, sc = scorer_server(inj)
+        rng = np.random.default_rng(4)
+        payloads = [sc.random_payload(rng) for _ in range(2)]
+        results = server.serve(payloads)
+        for p, r in zip(payloads, results):
+            np.testing.assert_allclose(r, sc.oracle(p), atol=1e-5)
+        assert inj.log == [("site", "run 0")]
+        assert server.counters["transient_faults"] == 1
+        assert server.counters["recovered"] == 2
+        assert server.health()["status"] == "degraded"  # recent fault
+        assert_drained(server)
+
+    def test_retry_budget_exhaustion_chains_fault(self):
+        inj = (FaultInjector()
+               .inject_site_failure(step=0)
+               .inject_site_failure(every=1, times=-1))  # every run fails
+        server, sc = scorer_server(inj, max_retries=2)
+        h = server.submit(sc.random_payload(np.random.default_rng(5)))
+        server.run_until_idle()
+        with pytest.raises(RetryBudgetExceeded, match="after 2 retries"):
+            h.result(timeout=0)
+        assert isinstance(h._error.__cause__, SimulatedFailure)
+        assert h.retries == 3             # budget + the exhausting charge
+        assert server.counters["retry_exhausted"] == 1
+        assert_drained(server)
+
+    def test_batch_permanent_error_fails_without_retry(self):
+        server, sc = scorer_server()
+        sc.pack = lambda *a, **k: (_ for _ in ()).throw(
+            TypeError("bad payload"))
+        h = server.submit(sc.random_payload(np.random.default_rng(6)))
+        server.run_until_idle()
+        with pytest.raises(TypeError, match="bad payload"):
+            h.result(timeout=0)
+        assert h.retries == 0
+        assert server.counters["transient_faults"] == 0
+        assert_drained(server)
+
+    def test_decode_site_fault_rewinds_one_tick_not_progress(self):
+        """A site failure mid-decode restores the last committed state
+        snapshot; both sequences resume and finish bit-identical to the
+        fault-free oracle — the tick was retried, not the requests."""
+        inj = FaultInjector().inject_site_failure(step=2)
+        server, lm = lm_server(inj, capacity=2, max_retries=3)
+        reqs = [LmRequest([3, 1, 4], 4), LmRequest([2, 7], 3)]
+        handles = [server.submit(r) for r in reqs]
+        server.run_until_idle()
+        for req, h in zip(reqs, handles):
+            toks, _ = lm.oracle_decode(req.prompt, req.max_new_tokens)
+            assert h.result(timeout=0)["tokens"] == toks
+        assert ("site", "run 2") in inj.log
+        assert server.counters["transient_faults"] == 1
+        assert server.counters["recovered"] == 2
+        assert all(h.retries == 1 for h in handles)
+        assert_drained(server)
+
+    def test_decode_nan_fault_recovers_through_numeric_guards(self):
+        """An injected NaN trips check_numerics (NumericsError names the
+        poisoned node); the server classifies it transient, rewinds the
+        tick, and the clean retry matches the oracle."""
+        inj = FaultInjector().inject_nan(node="relu", times=1)
+        server, lm = lm_server(inj, capacity=2, check_numerics=True)
+        req = LmRequest([5, 9], 4)
+        h = server.submit(req)
+        server.run_until_idle()
+        toks, _ = lm.oracle_decode(req.prompt, req.max_new_tokens)
+        assert h.result(timeout=0)["tokens"] == toks
+        assert server.counters["transient_faults"] >= 1
+        assert server.counters["recovered"] == 1
+        assert_drained(server)
+
+    def test_decode_permanent_error_fails_victims_keeps_serving(self):
+        server, lm = lm_server(capacity=2)
+        orig = lm.step_inputs
+        calls = {"n": 0}
+
+        def flaky(tokens):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise TypeError("poisoned inputs")
+            return orig(tokens)
+
+        lm.step_inputs = flaky
+        victim = server.submit(LmRequest([1], 2))
+        server.run_until_idle()
+        with pytest.raises(TypeError, match="poisoned inputs"):
+            victim.result(timeout=0)
+        assert victim.retries == 0        # permanent: no retry charged
+        survivor = server.submit(LmRequest([6, 2], 3))
+        server.run_until_idle()
+        toks, _ = lm.oracle_decode([6, 2], 3)
+        assert survivor.result(timeout=0)["tokens"] == toks
+        assert_drained(server)
+
+
+# =========================================================================
+# crash containment & watchdog (tentpole + satellite: black-hole fix)
+# =========================================================================
+
+class TestContainment:
+    def test_scheduler_crash_fails_inflight_with_diagnostic(self):
+        server, sc = scorer_server()
+        boom = RuntimeError("scheduler exploded")
+        server.step = lambda: (_ for _ in ()).throw(boom)
+        h = server.submit(sc.random_payload(np.random.default_rng(7)))
+        server.start(tick_wait_s=0.001)
+        with pytest.raises(RuntimeError, match="scheduler crashed") as ei:
+            h.result(timeout=5.0)
+        assert ei.value.__cause__ is boom
+        assert server.counters["scheduler_crashes"] == 1
+        assert server.health()["status"] == "stopped"
+        with pytest.raises(ServerStopped):
+            server.submit(sc.random_payload(np.random.default_rng(7)))
+        server.stop()
+        assert server._pending == 0
+
+    def test_watchdog_trips_on_hung_scheduler(self):
+        server, sc = scorer_server()
+        release = threading.Event()
+        server.step = lambda: release.wait(10.0) and 0  # hung dispatch
+        h = server.submit(sc.random_payload(np.random.default_rng(8)))
+        server.start(tick_wait_s=0.001, watchdog_timeout_s=0.15)
+        with pytest.raises(RuntimeError, match="watchdog"):
+            h.result(timeout=5.0)
+        assert server.counters["watchdog_trips"] == 1
+        assert server.health()["status"] == "stopped"
+        release.set()                     # let the hung thread drain
+        server.stop()
+        assert server._pending == 0
+
+    def test_watchdog_quiet_while_healthy(self):
+        server, sc = scorer_server()
+        rng = np.random.default_rng(9)
+        server.start(tick_wait_s=0.001, watchdog_timeout_s=1.0)
+        handles = [server.submit(sc.random_payload(rng)) for _ in range(5)]
+        for hd in handles:
+            np.testing.assert_allclose(hd.result(timeout=10.0),
+                                       sc.oracle(hd.payload), atol=1e-5)
+        server.stop()
+        assert server.counters["watchdog_trips"] == 0
+        assert server.health()["status"] == "stopped"  # explicit stop()
+        assert_drained(server)
